@@ -1,0 +1,213 @@
+"""One benchmark per paper table/figure (deliverable d).
+
+Each function returns rows of (name, value, derived/notes); run.py prints the
+combined CSV. Accuracy benchmarks use the synthetic image pipeline (no
+CIFAR10/ImageNet offline — see DESIGN.md §6), so they validate *relative*
+claims (BNN-vs-DNN gap, sparsity level, error-rate sensitivity) rather than
+absolute table numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy, mtj, p2m
+from repro.data import ImageStream
+from repro.models import vision
+
+Row = Tuple[str, float, str]
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5 — multi-MTJ majority error suppression
+# ---------------------------------------------------------------------------
+
+def bench_fig5_multi_mtj() -> List[Row]:
+    rows: List[Row] = []
+    cases = {"0.7V_p=0.062": (0.062, False), "0.8V_p=0.924": (0.924, True),
+             "0.9V_p=0.9717": (0.9717, True)}
+    for name, (p, should_switch) in cases.items():
+        for n in (1, 2, 4, 8):
+            m = max(1, n // 2)
+            act = float(mtj.majority_activation_probability(
+                jnp.asarray(p), n, m))
+            err = (1 - act) if should_switch else act
+            rows.append((f"fig5/{name}/n={n}", err * 100, "error_%"))
+    # the paper's claim: 8 MTJs push both error modes below 0.1%
+    fail, false = mtj.majority_error_rates(0.924, 0.062, 8, 4)
+    rows.append(("fig5/claim_fail<0.1%", float(fail) * 100,
+                 f"pass={float(fail) < 1e-3}"))
+    rows.append(("fig5/claim_false<0.1%", float(false) * 100,
+                 f"pass={float(false) < 1e-3}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 1 proxy — DNN vs sparse-BNN accuracy + sparsity (synthetic data)
+# ---------------------------------------------------------------------------
+
+def _train_vision(cfg: vision.VisionConfig, steps: int = 120,
+                  noise=(0.0, 0.0), binary=True, seed=0):
+    import dataclasses as dc
+    p2m_cfg = dc.replace(cfg.p2m, noise_p_fail=noise[0], noise_p_false=noise[1])
+    cfg = dc.replace(cfg, p2m=p2m_cfg)
+    params = vision.init_params(jax.random.PRNGKey(seed), cfg)
+    stream = ImageStream(hw=cfg.in_hw, num_classes=cfg.num_classes,
+                         global_batch=64, seed=seed)
+    lr = 3e-3
+
+    @jax.jit
+    def step(p, batch, key):
+        def loss(p_):
+            logits, hloss, aux = vision.forward(p_, batch["image"], cfg,
+                                                key=key)
+            lp = jax.nn.log_softmax(logits)
+            nll = -jnp.mean(jnp.take_along_axis(lp, batch["label"][:, None], 1))
+            return nll + hloss, aux
+        (l, aux), g = jax.value_and_grad(loss, has_aux=True)(p)
+        p = jax.tree.map(lambda w, gw: w - lr * gw, p, g)
+        return p, l, aux
+
+    key = jax.random.PRNGKey(seed + 1)
+    for i in range(steps):
+        params, l, aux = step(params, stream.next_batch(),
+                              jax.random.fold_in(key, i))
+    # eval
+    correct, total, spars = 0.0, 0, []
+    ev = ImageStream(hw=cfg.in_hw, num_classes=cfg.num_classes,
+                     global_batch=64, seed=seed + 100)
+    for _ in range(4):
+        b = ev.next_batch()
+        logits, _, aux = vision.forward(params, b["image"], cfg)
+        correct += float(jnp.sum(jnp.argmax(logits, -1) == b["label"]))
+        total += b["label"].shape[0]
+        spars.append(float(aux["p2m_sparsity"]))
+    return correct / total, float(np.mean(spars)), params, cfg
+
+
+_TRAINED = {}
+
+
+def _trained_tiny():
+    if "m" not in _TRAINED:
+        cfg = vision.VisionConfig(name="bench", arch="vgg_tiny",
+                                  num_classes=10)
+        _TRAINED["m"] = _train_vision(cfg, steps=80)
+    return _TRAINED["m"]
+
+
+def bench_table1_accuracy_proxy() -> List[Row]:
+    acc_bnn, sparsity, _, _ = _trained_tiny()
+    rows = [
+        ("table1/bnn_acc_synthetic", acc_bnn * 100, "acc_%"),
+        ("table1/p2m_sparsity", sparsity * 100,
+         f"paper_range=72-84%: {'pass' if sparsity > 0.5 else 'check'}"),
+        ("table1/chance", 10.0, "acc_%"),
+    ]
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8 — accuracy vs binary-activation switching error
+# ---------------------------------------------------------------------------
+
+def bench_fig8_error_sensitivity() -> List[Row]:
+    rows: List[Row] = []
+    base_acc, _, params, cfg = _trained_tiny()
+    ev = ImageStream(hw=cfg.in_hw, num_classes=cfg.num_classes,
+                     global_batch=64, seed=321)
+    batches = [ev.next_batch() for _ in range(3)]
+    import dataclasses as dc
+    for err in (0.0, 0.001, 0.03, 0.10, 0.30):
+        pcfg = dc.replace(cfg.p2m, noise_p_fail=err, noise_p_false=err)
+        ecfg = dc.replace(cfg, p2m=pcfg)
+        correct, total = 0.0, 0
+        for i, b in enumerate(batches):
+            logits, _, _ = vision.forward(params, b["image"], ecfg,
+                                          key=jax.random.PRNGKey(i))
+            correct += float(jnp.sum(jnp.argmax(logits, -1) == b["label"]))
+            total += b["label"].shape[0]
+        rows.append((f"fig8/err={err:g}", correct / total * 100, "acc_%"))
+    rows.append(("fig8/clean_baseline", base_acc * 100, "acc_%"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9 — energy; Eq. 3 — bandwidth; §3.4 — latency
+# ---------------------------------------------------------------------------
+
+def bench_fig9_energy() -> List[Row]:
+    rep = energy.energy_report()
+    return [
+        ("fig9/frontend_vs_baseline", rep["frontend_improvement_vs_baseline"],
+         "paper=8.2x"),
+        ("fig9/frontend_vs_insensor", rep["frontend_improvement_vs_insensor"],
+         "paper=8.0x"),
+        ("fig9/comm_improvement", rep["comm_improvement"], "paper=8.5x"),
+        ("fig9/frontend_ours_uJ", rep["frontend_pj"]["ours"] / 1e6, "uJ/frame"),
+        ("fig9/frontend_baseline_uJ", rep["frontend_pj"]["baseline"] / 1e6,
+         "uJ/frame"),
+    ]
+
+
+def bench_eq3_bandwidth() -> List[Row]:
+    c = energy.bandwidth_reduction()
+    rows = [("eq3/bandwidth_reduction", c, "paper=6x"),
+            ("eq3/paper_formula_literal", energy.paper_eq3(),
+             "as printed (see DESIGN.md §6)")]
+    for sp in (0.75, 0.83):
+        rows.append((f"eq3/entropy_coded_sp={sp}",
+                     energy.effective_bandwidth_with_sparsity(
+                         energy.VGG16_IMAGENET, sp), ">6x (paper §3.2)"))
+    rows.append(("eq3/csr_coded_sp=0.95",
+                 energy.effective_bandwidth_with_sparsity(
+                     energy.VGG16_IMAGENET, 0.95, coding="csr"),
+                 "CSR only wins at very high sparsity"))
+    return rows
+
+
+def bench_latency() -> List[Row]:
+    lat = energy.frame_latency_us()
+    return [
+        ("latency/frame_us", lat["total_us"], "paper<70us"),
+        ("latency/fps", lat["fps"], "global shutter"),
+        ("latency/write_us", lat["t_write_us"], "8 MTJs x 32 ch, 700ps"),
+        ("latency/read_us", lat["t_read_us"], "burst, column-parallel"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# kernel micro-benchmarks (CPU wall-time is NOT the perf claim — roofline is;
+# these check the fused path is not pathologically slow and report us/call)
+# ---------------------------------------------------------------------------
+
+def _time(f, *args, n=5) -> float:
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_kernels() -> List[Row]:
+    from repro.kernels import ops
+    from repro.models import blocks
+    key = jax.random.PRNGKey(0)
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (2, 256, 4, 64))
+               for i in range(3))
+    t_kernel = _time(lambda: ops.flash_attention(q, k, v, causal=True))
+    t_scan = _time(lambda: blocks.flash_attention(q, k, v, causal=True))
+    img = jax.random.uniform(key, (4, 32, 32, 3))
+    w = jax.random.normal(key, (3, 3, 3, 32)) * 0.3
+    t_p2m = _time(lambda: ops.p2m_conv(img, w, jnp.asarray(0.5),
+                                       jax.random.PRNGKey(1), block_n=128))
+    return [
+        ("kernel/flash_attention_us", t_kernel, "interpret-mode CPU"),
+        ("kernel/flash_scan_jax_us", t_scan, "pure-JAX path"),
+        ("kernel/p2m_conv_us", t_p2m, "interpret-mode CPU"),
+    ]

@@ -1,0 +1,41 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV. See EXPERIMENTS.md for the mapping to the
+paper's claims and §Roofline/§Perf for the dry-run-based performance tables.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import paper_benchmarks as pb
+    benches = [
+        pb.bench_fig5_multi_mtj,
+        pb.bench_fig9_energy,
+        pb.bench_eq3_bandwidth,
+        pb.bench_latency,
+        pb.bench_kernels,
+        pb.bench_table1_accuracy_proxy,
+        pb.bench_fig8_error_sensitivity,
+    ]
+    print("name,value,derived")
+    failures = 0
+    for bench in benches:
+        t0 = time.time()
+        try:
+            for name, value, derived in bench():
+                print(f"{name},{value:.6g},{derived}")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{bench.__name__},ERROR,{type(e).__name__}: {e}",
+                  file=sys.stderr)
+        print(f"# {bench.__name__} took {time.time() - t0:.1f}s",
+              file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

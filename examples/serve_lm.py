@@ -1,0 +1,46 @@
+"""Batched serving example: prefill + KV-cache decode on a reduced backbone.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch glm4-9b]
+
+Exercises the production decode path (MLA latent caches for deepseek, ring
+buffers for recurrentgemma local attention, O(1) state for xlstm).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.reduced import reduced
+from repro.models import lm
+from repro.serving import ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = reduced(configs.get_arch(args.arch))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServingEngine(cfg, params, max_len=96)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (args.batch, 16), 0,
+                                 cfg.vocab_size)
+    enc = None
+    if cfg.is_encdec:
+        enc = jax.random.normal(jax.random.PRNGKey(2),
+                                (args.batch, cfg.encoder_seq, cfg.d_model))
+    t0 = time.time()
+    out = engine.generate(prompts, args.new_tokens, encoder_embeddings=enc)
+    dt = time.time() - t0
+    print(f"{args.arch} (reduced): generated {tuple(out.shape)} tokens in "
+          f"{dt:.2f}s ({args.batch * args.new_tokens / dt:.0f} tok/s, "
+          f"batch={args.batch})")
+    print("first sequence:", list(map(int, out[0, :16])))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Fault-tolerant checkpointing.
+
+* atomic: write to ``step_N.tmp/`` then rename — a crash mid-write never
+  corrupts the latest checkpoint;
+* keep-K garbage collection;
+* async: the device->host gather happens synchronously (cheap), the disk
+  write happens on a background thread so the train loop keeps stepping;
+* elastic remesh: arrays are stored as full host arrays + the *logical* axes
+  tree, so ``restore(..., mesh=new_mesh, rules=...)`` can re-shard onto a
+  different topology than the one that saved (node-failure recovery with a
+  shrunken mesh, or scale-up).
+
+Format: one ``.npz`` per pytree (flattened with '/'-joined keys) + a JSON
+manifest (step, pipeline state, tree structure).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _to_native(arr) -> np.ndarray:
+    """npz cannot store ml_dtypes (bf16/fp8); widen to f32 — the restore path
+    casts back to the template dtype, so this is lossless for bf16."""
+    arr = np.asarray(arr)
+    if arr.dtype.type.__module__ != "numpy":   # ml_dtypes: bf16, fp8, ...
+        return arr.astype(np.float32)
+    return arr
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}__{i}/"))
+        if len(tree) == 0:
+            out[prefix + "__empty__"] = np.zeros((0,))
+    else:
+        out[prefix.rstrip("/")] = tree
+    return out
+
+
+def _unflatten_into(template, flat: Dict[str, Any], prefix=""):
+    if isinstance(template, dict):
+        return {k: _unflatten_into(v, flat, f"{prefix}{k}/")
+                for k, v in template.items()}
+    if isinstance(template, (list, tuple)):
+        vals = [_unflatten_into(v, flat, f"{prefix}__{i}/")
+                for i, v in enumerate(template)]
+        return type(template)(vals)
+    return flat[prefix.rstrip("/")]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save -----------------------------------------------------------------
+    def save(self, step: int, trees: Dict[str, Any],
+             extra: Optional[Dict] = None) -> None:
+        """trees: name -> pytree (e.g. {"params":…, "opt":…}). Blocks only on
+        the device->host transfer; disk IO runs on a background thread."""
+        host_trees = {name: jax.tree.map(lambda x: np.asarray(x), t)
+                      for name, t in trees.items()}
+        self.wait()
+        if self.async_write:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_trees, extra or {}))
+            self._thread.start()
+        else:
+            self._write(step, host_trees, extra or {})
+
+    def _write(self, step: int, host_trees, extra: Dict) -> None:
+        tmp = os.path.join(self.dir, f"step_{step}.tmp")
+        final = os.path.join(self.dir, f"step_{step}")
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        for name, tree in host_trees.items():
+            flat = _flatten(tree)
+            np.savez(os.path.join(tmp, f"{name}.npz"),
+                     **{k: _to_native(v) for k, v in flat.items()})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "extra": extra,
+                       "trees": sorted(host_trees)}, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name,
+                                                 "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, templates: Dict[str, Any],
+                shardings: Optional[Dict[str, Any]] = None):
+        """templates: name -> pytree of arrays/ShapeDtypeStructs (structure +
+        dtypes). shardings: optional name -> pytree of NamedShardings for
+        elastic remesh (device_put onto a possibly different mesh)."""
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        out = {}
+        for name, template in templates.items():
+            data = np.load(os.path.join(path, f"{name}.npz"))
+            flat = {k: data[k] for k in data.files}
+            tree = _unflatten_into(template, flat)
+            tmpl_flat = jax.tree.leaves(template)
+            tree_flat = jax.tree.leaves(tree)
+            casted = [np.asarray(v).astype(t.dtype)
+                      for v, t in zip(tree_flat, tmpl_flat)]
+            tree = jax.tree.unflatten(jax.tree.structure(template), casted)
+            if shardings and name in shardings:
+                tree = jax.tree.map(
+                    lambda x, s: jax.device_put(jnp.asarray(x), s),
+                    tree, shardings[name])
+            else:
+                tree = jax.tree.map(jnp.asarray, tree)
+            out[name] = tree
+        return out, manifest["extra"]

@@ -1,0 +1,2 @@
+"""Core of the reproduction: VC-MTJ ADC-less processing-in-pixel (paper §2)."""
+from repro.core import energy, hoyer, mtj, p2m, pixel  # noqa: F401

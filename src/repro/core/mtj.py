@@ -1,0 +1,195 @@
+"""VC-MTJ device model (paper §2.1, Figs. 1-2, 5).
+
+Models the fabricated 70 nm voltage-controlled MTJ used as the binary
+thresholding neuron + non-volatile global-shutter memory:
+
+* ``switching_probability(V, pulse_ps)`` — precessional VCMA switching
+  probability. The voltage dependence is a monotone piecewise-linear fit *in
+  logit space* through the paper's three measured AP->P points at 700 ps
+  (P_sw = 6.2% @ 0.7 V, 92.4% @ 0.8 V, 97.17% @ 0.9 V); the pulse-width
+  dependence is a sin^2 precession envelope peaking at half the precession
+  period (700 ps for AP->P, 500 ps for the 0.9 V P->AP reset pulse, Fig. 2).
+* multi-MTJ redundancy (8 devices / kernel) + majority vote, both analytic
+  (binomial tail) and Monte-Carlo (for the hardware-eval path), reproducing
+  Fig. 5's < 0.1% activation error.
+* resistance model (R_P / R_AP, TMR > 150%) for the burst-read comparator.
+
+Everything is pure JAX and differentiable where it needs to be (probabilities
+feed straight-through estimators in ``core/p2m.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --- measured device points (paper §2.2.3 / Fig. 5 caption) -----------------
+MEASURED_VOLTAGES = (0.70, 0.80, 0.90)          # volts, 700 ps AP->P pulses
+MEASURED_P_SW = (0.062, 0.924, 0.9717)          # switching probabilities
+
+
+def _logit(p: float) -> float:
+    return float(np.log(p / (1.0 - p)))
+
+
+_LOGITS = tuple(_logit(p) for p in MEASURED_P_SW)
+# end-extension slopes (logits / volt) so the fit stays monotone
+_SLOPE_LO = (_LOGITS[1] - _LOGITS[0]) / (MEASURED_VOLTAGES[1] - MEASURED_VOLTAGES[0])
+_SLOPE_HI = (_LOGITS[2] - _LOGITS[1]) / (MEASURED_VOLTAGES[2] - MEASURED_VOLTAGES[1])
+
+
+@dataclasses.dataclass(frozen=True)
+class MTJParams:
+    """Device parameters for the fabricated VC-MTJ stack."""
+    r_p: float = 4.0e3            # ohms, parallel state
+    tmr: float = 1.55             # (R_AP - R_P)/R_P > 150% near zero bias
+    diameter_nm: float = 70.0
+    write_pulse_ps: float = 700.0  # AP->P activation pulse (paper)
+    reset_pulse_ps: float = 500.0  # P->AP reset pulse @ 0.9 V (paper)
+    reset_voltage: float = 0.9
+    precession_period_ps: float = 1400.0   # write envelope peak @ 700 ps
+    reset_precession_period_ps: float = 1000.0  # reset envelope peak @ 500 ps
+    read_voltage: float = 0.1     # |V| well below disturb threshold
+    n_redundant: int = 8          # MTJs per kernel (paper uses 8)
+
+    @property
+    def r_ap(self) -> float:
+        return self.r_p * (1.0 + self.tmr)
+
+    @property
+    def majority(self) -> int:
+        """Votes needed to activate — majority of n_redundant."""
+        return self.n_redundant // 2
+
+
+DEFAULT_MTJ = MTJParams()
+
+
+def switching_logit(voltage: jax.Array) -> jax.Array:
+    """Monotone logit(P_sw) vs applied voltage, 700 ps pulse, AP->P."""
+    v = jnp.asarray(voltage)
+    vols = jnp.asarray(MEASURED_VOLTAGES)
+    logits = jnp.asarray(_LOGITS)
+    mid = jnp.interp(v, vols, logits)
+    lo = logits[0] + _SLOPE_LO * (v - vols[0])
+    hi = logits[2] + _SLOPE_HI * (v - vols[2])
+    return jnp.where(v < vols[0], lo, jnp.where(v > vols[2], hi, mid))
+
+
+def pulse_envelope(pulse_ps: jax.Array, period_ps: float) -> jax.Array:
+    """Precessional sin^2 envelope: peak switching at odd half-periods."""
+    return jnp.sin(jnp.pi * jnp.asarray(pulse_ps) / period_ps) ** 2
+
+
+def switching_probability(
+    voltage: jax.Array,
+    pulse_ps: float | jax.Array = 700.0,
+    params: MTJParams = DEFAULT_MTJ,
+) -> jax.Array:
+    """P(AP->P switch) for a voltage pulse of given width.
+
+    Exactly reproduces the three measured points at 700 ps.
+    """
+    p_v = jax.nn.sigmoid(switching_logit(voltage))
+    env = pulse_envelope(pulse_ps, params.precession_period_ps)
+    # normalise so the envelope is 1 at the nominal write pulse
+    env_ref = pulse_envelope(params.write_pulse_ps, params.precession_period_ps)
+    return p_v * jnp.clip(env / env_ref, 0.0, 1.0)
+
+
+def reset_probability(params: MTJParams = DEFAULT_MTJ) -> jax.Array:
+    """P(P->AP reset) at the nominal 0.9 V / 500 ps reset pulse."""
+    p_v = jax.nn.sigmoid(switching_logit(jnp.asarray(params.reset_voltage)))
+    return p_v  # envelope is at its peak for the reset pulse by construction
+
+
+# --- multi-MTJ majority statistics (Fig. 5) ---------------------------------
+
+def _binom_pmf(k: jax.Array, n: int, p: jax.Array) -> jax.Array:
+    log_c = (
+        jax.scipy.special.gammaln(n + 1.0)
+        - jax.scipy.special.gammaln(k + 1.0)
+        - jax.scipy.special.gammaln(n - k + 1.0)
+    )
+    eps = jnp.finfo(jnp.result_type(p, jnp.float32)).eps
+    pc = jnp.clip(p, eps, 1.0 - eps)       # avoid 0*inf NaNs at the edges
+    return jnp.exp(log_c + k * jnp.log(pc) + (n - k) * jnp.log1p(-pc))
+
+
+def majority_activation_probability(
+    p_single: jax.Array, n: int = 8, majority: int = 4
+) -> jax.Array:
+    """P(>= majority of n MTJs switch) given per-device P_sw.
+
+    This is the effective activation probability of the redundant neuron.
+    """
+    ks = jnp.arange(majority, n + 1, dtype=jnp.float32)
+    pmf = _binom_pmf(ks, n, jnp.asarray(p_single)[..., None])
+    return jnp.sum(pmf, axis=-1)
+
+
+def majority_error_rates(
+    p_should_switch: float | jax.Array,
+    p_should_not: float | jax.Array,
+    n: int = 8,
+    majority: int = 4,
+) -> Tuple[jax.Array, jax.Array]:
+    """(fail-to-activate, false-activate) error rates of the majority neuron.
+
+    Fig. 5: with the measured single-device probabilities these both fall
+    below 0.1%.
+    """
+    fail = 1.0 - majority_activation_probability(p_should_switch, n, majority)
+    false = majority_activation_probability(p_should_not, n, majority)
+    return fail, false
+
+
+def sample_majority_activation(
+    key: jax.Array,
+    p_single: jax.Array,
+    n: int = 8,
+    majority: int = 4,
+) -> jax.Array:
+    """Monte-Carlo hardware path: draw n Bernoulli switches, majority vote.
+
+    p_single may have any shape; returns a float {0,1} array of that shape.
+    """
+    draws = jax.random.bernoulli(key, p_single[..., None], p_single.shape + (n,))
+    votes = jnp.sum(draws.astype(jnp.int32), axis=-1)
+    return (votes >= majority).astype(p_single.dtype)
+
+
+# --- burst read (Fig. 6) -----------------------------------------------------
+
+def read_voltage_divider(
+    state_parallel: jax.Array, params: MTJParams = DEFAULT_MTJ,
+    r_load: float = 6.0e3,
+) -> jax.Array:
+    """V_MTJ seen by the comparator for P / AP states (resistive divider).
+
+    The > 150% TMR gives a wide sense margin; the comparator threshold is
+    placed mid-way between the two levels.
+    """
+    r = jnp.where(state_parallel > 0.5, params.r_p, params.r_ap)
+    return params.read_voltage * r_load / (r + r_load)
+
+
+def comparator_threshold(params: MTJParams = DEFAULT_MTJ, r_load: float = 6.0e3) -> float:
+    v_p = params.read_voltage * r_load / (params.r_p + r_load)
+    v_ap = params.read_voltage * r_load / (params.r_ap + r_load)
+    return float(0.5 * (v_p + v_ap))
+
+
+def burst_read(states: jax.Array, params: MTJParams = DEFAULT_MTJ) -> jax.Array:
+    """Sequential burst read of MTJ states -> binary activations (Fig. 6).
+
+    ``states`` is {0,1} (1 = parallel = activated). A parallel device pulls
+    V_MTJ *above* the comparator threshold -> output spike. Disturb-free by
+    VCMA polarity (read voltage raises the barrier).
+    """
+    v = read_voltage_divider(states, params)
+    return (v > comparator_threshold(params)).astype(jnp.float32)

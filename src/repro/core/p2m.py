@@ -1,0 +1,146 @@
+"""P2MConv — the paper's in-pixel first layer as a composable JAX module.
+
+Pipeline (paper Fig. 3/7):
+
+  4-bit quantized signed weights (transistor widths, VDD+/VDD- rails)
+    -> two-phase analog MAC with the circuit curve per phase (Fig. 4a)
+    -> passive subtractor (+ threshold-matching offset)
+    -> VC-MTJ binary activation
+         train:    Hoyer-extremum threshold + straight-through gradient,
+                   optional stochastic-switching noise injection (Fig. 8)
+         hardware: per-device Bernoulli switching x 8 MTJs + majority (Fig. 5)
+
+BatchNorm folding (paper §2.4.1): the BN scale is folded into the weight
+tensor ("embedding it directly into the pixel values of the weight tensor"),
+the shift into the comparator threshold.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hoyer, mtj, pixel
+
+
+@dataclasses.dataclass(frozen=True)
+class P2MConfig:
+    in_channels: int = 3
+    out_channels: int = 32      # paper §2.4.4: 32 channels (pixel pitch limit)
+    kernel_size: int = 3
+    stride: int = 2             # paper §2.4.4: stride 2
+    weight_bits: int = 4        # Table 1: 4-bit weights
+    hoyer_coeff: float = 1e-8
+    pixel: pixel.PixelCircuitParams = pixel.DEFAULT_PIXEL
+    mtj: mtj.MTJParams = mtj.DEFAULT_MTJ
+    # train-time stochastic-switching noise injection (Fig. 8 study)
+    noise_p_fail: float = 0.0   # P(1 -> 0): neuron fails to activate
+    noise_p_false: float = 0.0  # P(0 -> 1): neuron incorrectly activates
+
+
+def init_params(key: jax.Array, cfg: P2MConfig, dtype=jnp.float32) -> dict:
+    k = cfg.kernel_size
+    fan_in = k * k * cfg.in_channels
+    w = jax.random.normal(key, (k, k, cfg.in_channels, cfg.out_channels), dtype)
+    w = w * (2.0 / fan_in) ** 0.5
+    return {"w": w, "v_th": jnp.asarray(1.0, dtype)}
+
+
+def quantize_weights(w: jax.Array, bits: int) -> jax.Array:
+    """Symmetric fake-quant with STE (transistor-width discretization)."""
+    if bits <= 0 or bits >= 16:
+        return w
+    qmax = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / qmax
+    wq = jnp.round(w / scale) * scale
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+def _phase_conv(x: jax.Array, w: jax.Array, stride: int) -> jax.Array:
+    """NHWC conv with HWIO weights (one analog integration phase)."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def hardware_conv(x: jax.Array, w: jax.Array, cfg: P2MConfig) -> jax.Array:
+    """Two-phase signed MAC with the per-phase circuit non-linearity.
+
+    Phase 1 integrates the negative-weight transistors, phase 2 the positive
+    ones; each accumulated bitline voltage sees the Fig. 4a curve, then the
+    passive subtractor forms the difference.
+    """
+    wq = quantize_weights(w, cfg.weight_bits)
+    mac_pos = _phase_conv(x, jnp.maximum(wq, 0.0), cfg.stride)
+    mac_neg = _phase_conv(x, jnp.maximum(-wq, 0.0), cfg.stride)
+    return pixel.hardware_conv_output(mac_pos, mac_neg, cfg.pixel)
+
+
+def forward_train(
+    params: dict, x: jax.Array, cfg: P2MConfig,
+    key: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Training path: Hoyer spike + STE. Returns (binary activations, hoyer loss).
+
+    If cfg.noise_p_fail / noise_p_false are set (Fig. 8 robustness study) and a
+    key is given, activation bits are flipped with those probabilities via a
+    straight-through perturbation.
+    """
+    u = hardware_conv(x, params["w"], cfg)
+    o, hl = hoyer.hoyer_spike(u, params["v_th"])
+    if key is not None and (cfg.noise_p_fail > 0 or cfg.noise_p_false > 0):
+        k1, k2 = jax.random.split(key)
+        fail = jax.random.bernoulli(k1, cfg.noise_p_fail, o.shape)
+        false = jax.random.bernoulli(k2, cfg.noise_p_false, o.shape)
+        noisy = jnp.where(o > 0.5, 1.0 - fail.astype(o.dtype), false.astype(o.dtype))
+        o = o + jax.lax.stop_gradient(noisy - o)   # STE through the flips
+    return o, cfg.hoyer_coeff * hl
+
+
+def forward_hardware(
+    params: dict, x: jax.Array, cfg: P2MConfig, key: jax.Array,
+) -> jax.Array:
+    """Hardware-eval path: full device simulation.
+
+    conv -> threshold-matching voltage -> per-MTJ stochastic switching
+    (switching_probability at the applied V_CONV) x n_redundant -> majority.
+    """
+    u = hardware_conv(x, params["w"], cfg)
+    theta_norm = hoyer.effective_threshold(u, params["v_th"])   # in z units
+    theta = theta_norm * params["v_th"]                          # in u units
+    v_conv = pixel.conv_voltage(u, theta, cfg.pixel)
+    p_sw = mtj.switching_probability(v_conv, cfg.mtj.write_pulse_ps, cfg.mtj)
+    return mtj.sample_majority_activation(
+        key, p_sw, cfg.mtj.n_redundant, cfg.mtj.majority)
+
+
+def forward_ideal(params: dict, x: jax.Array, cfg: P2MConfig) -> jax.Array:
+    """Ideal (no circuit curve, deterministic) reference for ablations."""
+    wq = quantize_weights(params["w"], cfg.weight_bits)
+    u = _phase_conv(x, wq, cfg.stride)
+    o, _ = hoyer.hoyer_spike(u, params["v_th"])
+    return o
+
+
+def fuse_batchnorm(w: jax.Array, gamma: jax.Array, beta: jax.Array,
+                   mean: jax.Array, var: jax.Array, eps: float = 1e-5
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Fold BN into (weights, comparator shift B) — paper §2.4.1 / Fig. 7.
+
+    y = gamma * (conv - mean)/sqrt(var+eps) + beta
+      = conv * s + b,  s folded into the weight tensor, b into the threshold.
+    Returns (w_fused, threshold_shift) where the comparator fires at
+    v_th - threshold_shift.
+    """
+    s = gamma / jnp.sqrt(var + eps)
+    w_fused = w * s[None, None, None, :]
+    b = beta - mean * s
+    return w_fused, b
+
+
+def output_sparsity(o: jax.Array) -> jax.Array:
+    """Fraction of zeros in the binary activation map (Table 1 'Sp.')."""
+    return 1.0 - jnp.mean(o)

@@ -1,0 +1,137 @@
+"""Weight-augmented pixel circuit + passive analog subtractor (paper §2.2.1-2).
+
+* ``circuit_curve`` — the Fig. 4(a) transfer non-linearity of the
+  weight-augmented 3T pixel + shared bitline. We do not have GF22nm FDX PDK
+  access, so the measured HSpice scatter is stood in for by a parametric
+  compressive curve ``g(x) = s * tanh(x / s)`` over the normalized [-3, 3]
+  range ("closely tracks the ideal convolution, albeit with some non-linear
+  effects"). The curve is a registry entry — a measured LUT drops in.
+* two-phase signed MAC: negative-weight integration (phase 1, stored on the
+  top plate of C_H) then positive-weight integration (phase 2); the floating
+  bottom plate yields ``V_CONV = k * (g(mac+) - g(mac-)) + V_OFS``.
+* threshold-matching (paper §2.2.2 / §2.4.2): ``V_OFS = 0.5*VDD + (V_SW -
+  V_TH)`` aligns the device switching voltage with the *trainable* algorithmic
+  threshold, by repurposing the subtractor's DC offset.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+CurveFn = Callable[[jax.Array], jax.Array]
+
+_CURVES: Dict[str, CurveFn] = {}
+
+
+def register_curve(name: str):
+    def deco(fn: CurveFn) -> CurveFn:
+        _CURVES[name] = fn
+        return fn
+    return deco
+
+
+def get_curve(name: str) -> CurveFn:
+    return _CURVES[name]
+
+
+@register_curve("ideal")
+def _ideal(x: jax.Array) -> jax.Array:
+    return x
+
+
+@register_curve("gf22_tanh")
+def circuit_curve(x: jax.Array, saturation: float = 2.5) -> jax.Array:
+    """Compressive pixel/bitline transfer curve over the normalized range."""
+    return saturation * jnp.tanh(x / saturation)
+
+
+@dataclasses.dataclass(frozen=True)
+class PixelCircuitParams:
+    """Analog front-end constants (GF22nm FDX-flavoured)."""
+    vdd: float = 1.0              # analog supply for the subtractor/buffer
+    v_sw: float = 0.8             # VC-MTJ near-deterministic switching voltage
+    norm_range: float = 3.0       # algorithmic normalized range [-3, 3] (Fig. 4a)
+    curve: str = "gf22_tanh"
+    integration_time_us: float = 5.0
+
+    @property
+    def volts_per_unit(self) -> float:
+        """Linear map of the +-norm_range algorithmic range onto [0, VDD]."""
+        return self.vdd / (2.0 * self.norm_range)
+
+
+DEFAULT_PIXEL = PixelCircuitParams()
+
+
+def photodiode_discharge(intensity: jax.Array, p: PixelCircuitParams = DEFAULT_PIXEL) -> jax.Array:
+    """Node-N voltage after integration: discharges faster for brighter pixels.
+
+    ``intensity`` is normalized [0, 1]; returns gate voltage of M1 in volts.
+    Linear-discharge model (fixed integration time well inside the linear
+    region of the photodiode well).
+    """
+    return p.vdd * (1.0 - jnp.clip(intensity, 0.0, 1.0))
+
+
+def two_phase_mac(
+    x: jax.Array, w: jax.Array, p: PixelCircuitParams = DEFAULT_PIXEL
+) -> jax.Array:
+    """Signed analog MAC via two integration phases + circuit curve.
+
+    x: inputs broadcast against w along the contraction axes; the caller sums
+    per-kernel (this helper contracts the trailing axes of both).
+    Phase 1 accumulates the negative-weight MAC, phase 2 the positive-weight
+    MAC; each phase sees the bitline non-linearity independently.
+    """
+    g = get_curve(p.curve)
+    axes = tuple(range(x.ndim - w.ndim, x.ndim))
+    mac_pos = jnp.sum(x * jnp.maximum(w, 0.0), axis=axes)
+    mac_neg = jnp.sum(x * jnp.maximum(-w, 0.0), axis=axes)
+    return g(mac_pos) - g(mac_neg)
+
+
+def hardware_conv_output(mac_pos: jax.Array, mac_neg: jax.Array,
+                         p: PixelCircuitParams = DEFAULT_PIXEL) -> jax.Array:
+    """Apply the per-phase circuit curve and subtract (normalized units)."""
+    g = get_curve(p.curve)
+    return g(mac_pos) - g(mac_neg)
+
+
+def threshold_matching_offset(
+    v_th: jax.Array, p: PixelCircuitParams = DEFAULT_PIXEL
+) -> jax.Array:
+    """V_OFS = 0.5*VDD + (V_SW - V_TH)  (paper §2.2.2).
+
+    v_th is the hardware-mapped algorithmic threshold *voltage*.
+    """
+    return 0.5 * p.vdd + (p.v_sw - v_th)
+
+
+def algorithmic_threshold_to_volts(
+    theta: jax.Array, p: PixelCircuitParams = DEFAULT_PIXEL
+) -> jax.Array:
+    """Map a normalized algorithmic threshold onto the subtractor voltage axis.
+
+    theta in normalized units (same axis as the conv output); mid-rail is 0.
+    """
+    return 0.5 * p.vdd + p.volts_per_unit * theta
+
+
+def conv_voltage(
+    conv_norm: jax.Array, theta: jax.Array, p: PixelCircuitParams = DEFAULT_PIXEL
+) -> jax.Array:
+    """Voltage applied to the VC-MTJ for a normalized conv output.
+
+    With the threshold-matching offset, ``conv_norm >= theta`` iff
+    ``V_CONV >= V_SW`` — this identity is what makes the MTJ a faithful
+    implementation of the algorithmic comparison (tested in
+    tests/test_pixel.py). The buffer rails clip V_CONV to [0, 1.2*VDD]; the
+    paper notes saturation above V_SW is harmless (binary output).
+    """
+    v_th = algorithmic_threshold_to_volts(theta, p)
+    v_ofs = threshold_matching_offset(v_th, p)
+    v = v_ofs + p.volts_per_unit * conv_norm
+    return jnp.clip(v, 0.0, 1.2 * p.vdd)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (TokenStream, ImageStream, make_lm_batch,
+                                  make_image_batch)

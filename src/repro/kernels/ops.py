@@ -1,0 +1,96 @@
+"""jit'd public wrappers around the Pallas kernels (padding, GQA expansion,
+im2col) — the API the rest of the framework calls.
+
+Kernels execute in interpret mode on CPU (this container) and compiled mode
+on real TPUs (``interpret=False``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.p2m_conv import p2m_conv_pallas
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    rem = x.shape[axis] % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, mult - rem)
+    return jnp.pad(x, pad)
+
+
+def im2col(images: jax.Array, kernel: int, stride: int) -> jax.Array:
+    """NHWC -> (B*H'*W', k*k*C) patch rows (SAME padding)."""
+    b, h, w, c = images.shape
+    ph = pw = kernel // 2
+    x = jnp.pad(images, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    ho, wo = h // stride, w // stride
+    idx = jnp.arange(ho) * stride
+    jdx = jnp.arange(wo) * stride
+    patches = []
+    for di in range(kernel):
+        for dj in range(kernel):
+            patches.append(x[:, idx + di][:, :, jdx + dj])   # (B,H',W',C)
+    out = jnp.stack(patches, axis=3)                          # (B,H',W',k*k,C)
+    return out.reshape(b * ho * wo, kernel * kernel * c)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "stride", "n_mtj",
+                                             "interpret", "block_n"))
+def p2m_conv(images: jax.Array, w: jax.Array, theta: jax.Array,
+             key: jax.Array, *, kernel: int = 3, stride: int = 2,
+             n_mtj: int = 8, interpret: bool = True, block_n: int = 256
+             ) -> jax.Array:
+    """Fused P2M layer. images (B,H,W,C) in [0,1]; w (k,k,C,Cout) signed
+    quantized weights; theta () threshold. Returns (B,H',W',Cout) binary."""
+    b, h, wd, c = images.shape
+    cout = w.shape[-1]
+    ho, wo = h // stride, wd // stride
+    patches = im2col(images, kernel, stride)                 # (N, K)
+    wm = w.reshape(kernel * kernel * c, cout)
+    n = patches.shape[0]
+    bits = jax.random.bits(key, (n, cout), jnp.uint32)
+
+    # MXU alignment: pad K and C to 128 lanes, N to the block size
+    patches = _pad_to(patches, 1, 128)
+    wm = _pad_to(_pad_to(wm, 0, 128), 1, 128)
+    bits_p = _pad_to(bits, 1, 128)
+    n_pad = -n % block_n
+    if n_pad:
+        patches = jnp.pad(patches, ((0, n_pad), (0, 0)))
+        bits_p = jnp.pad(bits_p, ((0, n_pad), (0, 0)))
+    out = p2m_conv_pallas(patches.astype(jnp.float32), wm.astype(jnp.float32),
+                          theta.reshape(1, 1).astype(jnp.float32), bits_p,
+                          n_mtj=n_mtj, block_n=block_n, interpret=interpret)
+    return out[:n, :cout].reshape(b, ho, wo, cout)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool = True) -> jax.Array:
+    """GQA-aware wrapper: (B,S,H,D) x (B,S,Hkv,D) -> (B,S,H,D)."""
+    h, hkv = q.shape[2], k.shape[2]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    d = q.shape[-1]
+    scale = d ** -0.5
+    dp = -d % 128
+    if dp:
+        # padded q/k lanes contribute 0 to scores; padded v lanes sliced off
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, dp)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, dp)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dp)))
+    out = flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                 block_kv=block_kv, interpret=interpret,
+                                 scale=scale)
+    return out[..., :d]

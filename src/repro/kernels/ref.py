@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mtj as mtj_model
+from repro.core import pixel as pixel_model
+
+
+# ---------------------------------------------------------------------------
+# p2m_conv oracle: fused in-pixel conv -> curve -> subtract -> MTJ majority
+# ---------------------------------------------------------------------------
+
+def majority_prob_poly(p: jax.Array, n: int = 8, m: int = 4) -> jax.Array:
+    """P(Binomial(n, p) >= m) as an explicit polynomial (kernel-friendly)."""
+    out = jnp.zeros_like(p)
+    from math import comb
+    for k in range(m, n + 1):
+        out = out + comb(n, k) * (p ** k) * ((1 - p) ** (n - k))
+    return out
+
+
+def p2m_conv_ref(patches: jax.Array, w: jax.Array, theta: jax.Array,
+                 bits: jax.Array, *,
+                 vdd: float = 1.0, v_sw: float = 0.8, norm_range: float = 3.0,
+                 saturation: float = 2.5, n_mtj: int = 8) -> jax.Array:
+    """Oracle for the fused P2M kernel.
+
+    patches: (N, K) im2col rows; w: (K, C) signed quantized weights;
+    theta: () algorithmic threshold (Hoyer extremum x v_th, in conv units);
+    bits: (N, C) uint32 random words (one Bernoulli draw; the 8-MTJ majority
+    is folded into the probability — distributionally identical).
+    Returns float {0,1} activations (N, C).
+    """
+    mac_pos = patches @ jnp.maximum(w, 0.0)
+    mac_neg = patches @ jnp.maximum(-w, 0.0)
+    g = lambda x: saturation * jnp.tanh(x / saturation)
+    u = g(mac_pos) - g(mac_neg)
+    # threshold-matching voltage map: V = V_SW + k * (u - theta)
+    k = vdd / (2.0 * norm_range)
+    v = jnp.clip(v_sw + k * (u - theta), 0.0, 1.2 * vdd)
+    p_sw = mtj_model.switching_probability(v)
+    q = majority_prob_poly(p_sw, n_mtj, n_mtj // 2)
+    draw = (bits.astype(jnp.float32) / jnp.float32(2 ** 32)) < q
+    return draw.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# flash attention oracle
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True) -> jax.Array:
+    """q,k,v: (B, S, H, D) (no GQA in the kernel API — callers expand)."""
+    b, s, h, d = q.shape
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * d ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        sc = jnp.where(mask[None, None], sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

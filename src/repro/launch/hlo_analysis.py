@@ -1,0 +1,181 @@
+"""HLO-level analysis of compiled dry-run artifacts.
+
+``collective_stats`` parses the (post-SPMD, per-device) HLO text and sums the
+traffic of every collective op; ``roofline`` combines it with
+``cost_analysis()`` into the three-term roofline of EXPERIMENTS.md §Roofline.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+~50 GB/s/link ICI (per the brief).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# any shape literal on an op line:  bf16[8,128]
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> Dict[str, int]:
+    """Per-device collective traffic (bytes) by op kind.
+
+    Volume model (ring algorithms): all-reduce moves ~2x its buffer per
+    device; all-gather / reduce-scatter / all-to-all / permute ~1x the larger
+    of (operand, result). '-start/-done' async pairs are counted once (start).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        base = None
+        for c in _COLLECTIVES:
+            if f" {c}(" in stripped or f" {c}-start(" in stripped:
+                base = c
+                break
+        if base is None:
+            continue
+        sizes = [_shape_bytes(d, dims) for d, dims in
+                 _SHAPE_RE.findall(stripped)]
+        if not sizes:
+            continue
+        nbytes = max(sizes)
+        factor = 2 if base == "all-reduce" else 1
+        out[base] += factor * nbytes
+        out["count"] += 1
+    out["total_bytes"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def analytic_memory_bytes(cfg, shape, mesh_shape: Dict[str, int],
+                          arg_bytes: float, out_bytes: float) -> float:
+    """Fusion-aware HBM-traffic estimate per device per step.
+
+    XLA:CPU's ``bytes accessed`` counts every unfused op's operands (we
+    measured ~30-60x inflation vs a fused TPU execution), so the memory
+    roofline term uses this analytic model instead (the raw number is still
+    reported as ``hlo_bytes_unfused``):
+
+      train:   read args + write outputs (params+opt, = arg+out bytes from
+               memory_analysis) + activation traffic ~ 4x the remat-saved
+               layer inputs (fwd write, bwd read + recompute stream);
+      prefill: args + cache write + 4x layer activations;
+      decode:  args (params + whole KV cache read) + outputs — decode is
+               pure streaming.
+    """
+    n_model = mesh_shape.get("model", 1)
+    n_batch = 1
+    for a in ("pod", "data"):
+        n_batch *= mesh_shape.get(a, 1)
+    b_loc = max(shape.global_batch // n_batch, 1)
+    dt = 2  # bf16 activations
+    if shape.kind == "decode":
+        return arg_bytes + out_bytes
+    act = cfg.num_layers * b_loc * shape.seq_len * cfg.d_model * dt * 4.0
+    if shape.kind == "train":
+        return arg_bytes + out_bytes + act
+    return arg_bytes + out_bytes + act  # prefill
+
+
+def roofline(cost: Dict[str, float], coll: Dict[str, int], n_chips: int,
+             model_flops: Optional[float] = None,
+             analytic_bytes: Optional[float] = None) -> Dict[str, float]:
+    """Three roofline terms (seconds) from a compiled cell.
+
+    cost_analysis flops/bytes are for the per-device module already (SPMD),
+    so we do NOT divide by n_chips again.
+    """
+    flops = float(cost.get("flops", 0.0))
+    bytes_hbm = float(analytic_bytes if analytic_bytes is not None
+                      else cost.get("bytes accessed", 0.0))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_hbm / HBM_BW
+    t_collective = coll["total_bytes"] / ICI_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_collective)), key=lambda kv: kv[1])[0]
+    out = {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "device_flops": flops,
+        "device_bytes": bytes_hbm,
+        "hlo_bytes_unfused": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll["total_bytes"],
+        "collective_count": coll["count"],
+    }
+    if model_flops:
+        # useful-compute ratio: 'model flops' (6ND-style) vs compiled flops
+        out["model_flops_per_device"] = model_flops / n_chips
+        out["useful_flops_ratio"] = (model_flops / n_chips) / max(flops, 1.0)
+        t_star = max(t_compute, t_memory, t_collective)
+        out["roofline_fraction"] = (model_flops / n_chips / PEAK_FLOPS) \
+            / max(t_star, 1e-30)
+    return out
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6*N_active*D for train, 2*N_active*D for inference (global, all chips).
+
+    N counts active (dense-equivalent) parameters per token; D = tokens
+    processed by the step.
+    """
+    d, L = cfg.d_model, cfg.num_layers
+    dh = cfg.resolved_head_dim
+    n_attn_per_layer = 0
+    for mixer, mlp in cfg.layer_kinds():
+        if mixer in ("attn", "local_attn", "enc_attn"):
+            n_attn_per_layer += d * dh * (cfg.num_heads * 2
+                                          + cfg.num_kv_heads * 2)
+        elif mixer == "mla":
+            r = cfg.kv_lora_rank
+            q_in = cfg.q_lora_rank or d
+            n_attn_per_layer += (d * r + d * cfg.rope_head_dim
+                                 + (d * cfg.q_lora_rank if cfg.q_lora_rank
+                                    else 0)
+                                 + q_in * cfg.num_heads * (dh + cfg.rope_head_dim)
+                                 + r * cfg.num_heads * dh * 2
+                                 + cfg.num_heads * dh * d)
+        elif mixer in ("rglru",):
+            r = d
+            n_attn_per_layer += d * r * 2 + r * r * 2 + r * d
+        elif mixer in ("mlstm", "slstm"):
+            n_attn_per_layer += d * cfg.num_heads * dh * 5
+        if mlp == "dense":
+            ff = cfg.dense_d_ff or cfg.d_ff
+            n_attn_per_layer += d * ff * (3 if cfg.mlp_gated else 2)
+        elif mlp == "moe":
+            active = cfg.top_k + cfg.num_shared_experts
+            n_attn_per_layer += d * cfg.d_ff * 3 * active + d * cfg.num_experts
+    n_active = n_attn_per_layer + 2 * cfg.vocab_size * d
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n_active * tokens

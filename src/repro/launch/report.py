@@ -1,0 +1,84 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the JSON records.
+
+    PYTHONPATH=src python -m repro.launch.report [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "..", "..", "..", "experiments", "dryrun")
+
+
+def load_records(tag: str = "") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if (r.get("tag") or "") == tag:
+            out.append(r)
+    return out
+
+
+def _fmt_bytes(b) -> str:
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f}"
+
+
+def roofline_table(records: List[Dict], mesh: str) -> str:
+    rows = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant "
+            "| 6ND/HLO | roofline frac | coll GB | args GiB/dev |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        if r["mesh"] != mesh or not r.get("ok"):
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['t_compute_s']:.4f} | "
+            f"{rf['t_memory_s']:.4f} | {rf['t_collective_s']:.4f} | "
+            f"{rf['dominant']} | {rf.get('useful_flops_ratio', 0):.2f} | "
+            f"{rf.get('roofline_fraction', 0):.3f} | "
+            f"{rf['collective_bytes'] / 1e9:.2f} | "
+            f"{_fmt_bytes(r['memory']['argument_bytes'])} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(records: List[Dict]) -> str:
+    rows = ["| arch | shape | mesh | status | compile (s) | args GiB/dev | "
+            "peak GiB/dev | collectives |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        if r.get("ok"):
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK | "
+                f"{r['compile_s']:.0f} | "
+                f"{_fmt_bytes(r['memory']['argument_bytes'])} | "
+                f"{_fmt_bytes(r['memory']['peak_bytes'])} | "
+                f"{r['collectives_raw']['count']} |")
+        else:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"FAIL: {r.get('error', '')[:60]} | | | | |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    records = load_records(args.tag)
+    n_ok = sum(1 for r in records if r.get("ok"))
+    print(f"## Dry-run ({n_ok}/{len(records)} cells OK)\n")
+    print(dryrun_table(records))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(records, "16x16"))
+    print("\n## Roofline (multi-pod 2x16x16)\n")
+    print(roofline_table(records, "2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Abstract input specs + sharding assembly for the dry-run and launchers.
+
+``input_specs(arch, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, zero allocation), following the
+brief: [audio]/[vlm] archs get stub frontend embeddings / pre-quantized
+tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import sharding
+from repro.configs.base import ArchConfig, OptimizerConfig, ShapeSpec
+from repro.models import lm
+from repro.models.params import abstract_tree, axes_tree, is_spec
+from repro.optim.optimizer import OptState
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def batch_spec(mesh: Mesh, global_batch: int) -> P:
+    axes = sharding.batch_axes(mesh)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if global_batch % size != 0:
+        # shrink to the largest prefix that divides (long_500k: batch 1 ->
+        # fully replicated)
+        while axes and global_batch % size != 0:
+            axes = axes[:-1]
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+    return P(axes if axes else None)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh
+                ) -> Dict[str, Any]:
+    """Abstract inputs for the given (arch x shape) cell."""
+    bspec = batch_spec(mesh, shape.global_batch)
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = _sds((b, s), jnp.int32, mesh, P(*bspec, None))
+        out["labels"] = _sds((b, s), jnp.int32, mesh, P(*bspec, None))
+        if cfg.is_encdec:
+            out["encoder_embeddings"] = _sds(
+                (b, cfg.encoder_seq, cfg.d_model), cfg.dtype, mesh,
+                P(*bspec, None, None))
+    elif shape.kind == "prefill":
+        out["tokens"] = _sds((b, s), jnp.int32, mesh, P(*bspec, None))
+        if cfg.is_encdec:
+            out["encoder_embeddings"] = _sds(
+                (b, cfg.encoder_seq, cfg.d_model), cfg.dtype, mesh,
+                P(*bspec, None, None))
+    else:  # decode: one new token against a seq_len cache
+        out["tokens"] = _sds((b, 1), jnp.int32, mesh, P(*bspec, None))
+    return out
+
+
+def abstract_params_sharded(cfg: ArchConfig, mesh: Mesh,
+                            rules: sharding.ShardingRules):
+    spec_tree = lm.model_spec(cfg)
+    ab = abstract_tree(spec_tree, cfg.pdtype)
+    axes = axes_tree(spec_tree)
+
+    def attach(sds, ax):
+        ns = NamedSharding(mesh, sharding.logical_to_spec(
+            ax, sds.shape, mesh, rules))
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=ns)
+
+    return jax.tree.map(attach, ab, axes,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def abstract_cache_sharded(cfg: ArchConfig, batch: int, max_len: int,
+                           mesh: Mesh, rules: sharding.ShardingRules):
+    spec_tree = lm.cache_spec(cfg, batch, max_len)
+    ab = abstract_tree(spec_tree, cfg.dtype)
+    axes = axes_tree(spec_tree)
+
+    def attach(sds, ax):
+        ns = NamedSharding(mesh, sharding.logical_to_spec(
+            ax, sds.shape, mesh, rules))
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=ns)
+
+    return jax.tree.map(attach, ab, axes,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def abstract_opt_state(cfg: ArchConfig, opt_cfg: OptimizerConfig, mesh: Mesh,
+                       rules: sharding.ShardingRules) -> OptState:
+    """Abstract optimizer state, sharded like the parameters (ZeRO-style)."""
+    params = abstract_params_sharded(cfg, mesh, rules)
+
+    def mu_of(p):
+        if not opt_cfg.use_momentum:
+            return ()
+        return jax.ShapeDtypeStruct(p.shape,
+                                    jnp.dtype(opt_cfg.momentum_dtype),
+                                    sharding=p.sharding)
+
+    def nu_of(p):
+        if opt_cfg.name != "adamw":
+            return ()
+        if opt_cfg.factored_second_moment and len(p.shape) >= 2 \
+                and p.shape[-1] > 1 and p.shape[-2] > 1:
+            row_spec = P(*(p.sharding.spec + (None,) * (len(p.shape)
+                           - len(p.sharding.spec)))[:-1])
+            full = tuple(p.sharding.spec) + (None,) * (len(p.shape)
+                                                       - len(p.sharding.spec))
+            col_spec = P(*(full[:-2] + (full[-1],)))
+            return (jax.ShapeDtypeStruct(p.shape[:-1], jnp.float32,
+                                         sharding=NamedSharding(mesh, row_spec)),
+                    jax.ShapeDtypeStruct(p.shape[:-2] + p.shape[-1:],
+                                         jnp.float32,
+                                         sharding=NamedSharding(mesh, col_spec)))
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32, sharding=p.sharding)
+
+    leaves, tdef = jax.tree.flatten(params)
+    return OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32,
+                                  sharding=NamedSharding(mesh, P())),
+        mu=tdef.unflatten([mu_of(p) for p in leaves]),
+        nu=tdef.unflatten([nu_of(p) for p in leaves]),
+    )

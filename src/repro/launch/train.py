@@ -1,0 +1,81 @@
+"""End-to-end training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-3b \
+        --steps 200 --scale tiny --batch 8 --seq 128
+
+``--scale tiny`` runs a reduced config on the host devices (the CPU demo /
+examples path); ``--scale full`` uses the production mesh (requires the
+actual chips, or the dry-run's forced host device count).
+Fault tolerance: checkpoints every --ckpt-every steps; re-running the same
+command resumes from the latest checkpoint; SIGTERM triggers a final
+checkpoint at the next step boundary (preemption-safe).
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import time
+
+import jax
+
+from repro import configs, sharding
+from repro.configs.base import OptimizerConfig, RunConfig
+from repro.configs.reduced import reduced
+from repro.data import TokenStream
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import lm
+from repro.train import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--scale", choices=("tiny", "full"), default="tiny")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.get_arch(args.arch)
+    if args.scale == "tiny":
+        cfg = reduced(cfg)
+        mesh = None
+    else:
+        mesh = make_production_mesh()
+
+    run = RunConfig(
+        arch=cfg,
+        optimizer=OptimizerConfig(lr=args.lr, total_steps=args.steps,
+                                  warmup_steps=min(20, args.steps // 5),
+                                  grad_compression=args.grad_compression),
+        microbatches=args.microbatches,
+        checkpoint_dir=f"{args.ckpt_dir}/{args.arch}",
+        checkpoint_every=args.ckpt_every,
+        log_every=max(1, args.steps // 20),
+    )
+    stream = TokenStream(cfg.vocab_size, args.seq, args.batch)
+    trainer = Trainer(run, stream, mesh=mesh)
+    signal.signal(signal.SIGTERM, lambda *_: trainer.request_stop())
+
+    params, opt, start = trainer.restore_or_init(
+        lambda: lm.init_params(jax.random.PRNGKey(run.seed), cfg))
+    if start:
+        print(f"resumed from checkpoint at step {start}")
+    t0 = time.time()
+    params, opt, step = trainer.fit(params, opt, start, args.steps)
+    dt = time.time() - t0
+    for h in trainer.history:
+        print({k: round(v, 4) for k, v in h.items()})
+    steps_done = max(step - start, 1)
+    print(f"\n{steps_done} steps in {dt:.1f}s "
+          f"({1e3 * dt / steps_done:.0f} ms/step); final loss "
+          f"{trainer.history[-1]['loss']:.4f}" if trainer.history else "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,327 @@
+"""Recurrent mixers: RG-LRU (RecurrentGemma/Griffin) and xLSTM (mLSTM/sLSTM).
+
+All three support:
+  * parallel training over a full sequence (associative scan for RG-LRU,
+    stabilized chunkwise form for mLSTM, stepwise lax.scan for sLSTM), and
+  * O(1)-state single-token decode — which is what makes the `long_500k`
+    shape feasible for these families (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamSpec
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------------
+# RG-LRU (real-gated linear recurrent unit)
+# ----------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+_CONV_W = 4
+
+
+def rglru_spec(cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    r = d                     # lru width = d_model (RecurrentGemma-2B)
+    return {
+        "w_in": ParamSpec((d, r), ("embed", "rnn")),
+        "w_gate": ParamSpec((d, r), ("embed", "rnn")),
+        "conv_w": ParamSpec((_CONV_W, r), ("conv", "rnn"), scale=2.0),
+        "w_a": ParamSpec((r, r), ("rnn", None)),
+        "b_a": ParamSpec((r,), (None,), init="zeros"),
+        "w_i": ParamSpec((r, r), ("rnn", None)),
+        "b_i": ParamSpec((r,), (None,), init="zeros"),
+        "lam": ParamSpec((r,), (None,), init="ones"),
+        "w_out": ParamSpec((r, d), ("rnn", "embed")),
+    }
+
+
+def _causal_conv1d(u: jax.Array, w: jax.Array,
+                   state: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. u: (B,S,R), w: (W,R). Returns (out, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(u.shape[:1] + (width - 1,) + u.shape[2:], u.dtype)
+    else:
+        pad = state
+    full = jnp.concatenate([pad, u], axis=1)
+    out = sum(full[:, i:i + u.shape[1]] * w[i] for i in range(width))
+    return out, full[:, -(width - 1):]
+
+
+def _rglru_gates(params, u):
+    r = jax.nn.sigmoid(u @ params["w_a"].astype(u.dtype)
+                       + params["b_a"].astype(u.dtype))
+    i = jax.nn.sigmoid(u @ params["w_i"].astype(u.dtype)
+                       + params["b_i"].astype(u.dtype))
+    log_a = (-_RGLRU_C * jax.nn.softplus(params["lam"].astype(jnp.float32))
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0))
+    return a, (beta * (i * u).astype(jnp.float32))
+
+
+def rglru_apply(params: Dict, x: jax.Array, cfg: ArchConfig, mesh, rules, *,
+                mode: str = "train", cache: Optional[Dict] = None
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    def cons(t, axes):
+        return sharding.constrain(t, axes, mesh, rules) if mesh else t
+
+    u0 = x @ params["w_in"].astype(x.dtype)
+    u0 = cons(u0, ("batch", "seq", "rnn"))
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(x.dtype))
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None
+        u, conv_state = _causal_conv1d(u0, params["conv_w"].astype(x.dtype),
+                                       cache["conv"])
+        a, b = _rglru_gates(params, u)
+        h = a[:, 0] * cache["h"] + b[:, 0]          # (B, R) f32
+        new_cache = {"h": h, "conv": conv_state}
+        hs = h[:, None]
+    else:
+        u, conv_state = _causal_conv1d(u0, params["conv_w"].astype(x.dtype))
+        a, b = _rglru_gates(params, u)
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        a_s, b_s = jax.lax.associative_scan(combine, (a, b), axis=1)
+        hs = b_s                                     # h_t for h_0 = 0
+        if mode == "prefill":
+            new_cache = {"h": hs[:, -1], "conv": conv_state}
+    y = (hs.astype(x.dtype) * gate) @ params["w_out"].astype(x.dtype)
+    return cons(y, ("batch", "seq", "embed")), new_cache
+
+
+def rglru_cache_spec(cfg: ArchConfig, batch: int) -> Dict[str, Any]:
+    r = cfg.d_model
+    return {
+        "h": ParamSpec((batch, r), ("batch", "rnn"), init="zeros",
+                       dtype="float32"),
+        "conv": ParamSpec((batch, _CONV_W - 1, r), ("batch", None, "rnn"),
+                          init="zeros"),
+    }
+
+
+# ----------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM, chunkwise-parallel, stabilized)
+# ----------------------------------------------------------------------------
+
+def mlstm_spec(cfg: ArchConfig) -> Dict[str, Any]:
+    d, h = cfg.d_model, cfg.num_heads
+    dh = cfg.resolved_head_dim
+    return {
+        "wq": ParamSpec((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, h, dh), ("embed", "heads", "head_dim")),
+        "wv": ParamSpec((d, h, dh), ("embed", "heads", "head_dim")),
+        "wi": ParamSpec((d, h), ("embed", "heads"), scale=0.1),
+        "wf": ParamSpec((d, h), ("embed", "heads"), scale=0.1),
+        "wo_gate": ParamSpec((d, h, dh), ("embed", "heads", "head_dim")),
+        "wo": ParamSpec((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _mlstm_chunk_step(carry, inp, dh):
+    """One chunk. carry: (C, n, m); inp: q,k,v (B,Cc,H,dh), i_pre,f_pre (B,Cc,H)."""
+    C, n, m = carry            # C:(B,H,dk,dv) n:(B,H,dk) m:(B,H) — all f32
+    q, k, v, i_pre, f_pre = inp
+    b, cc, h, _ = q.shape
+    lf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))        # (B,Cc,H)
+    bcum = jnp.cumsum(lf, axis=1)                             # inclusive
+    total = bcum[:, -1]                                       # (B,H)
+    ip = i_pre.astype(jnp.float32)
+
+    # intra-chunk log weights w[t, j] = bcum_t - bcum_j + lf_j? standard:
+    # sum_{s=j+1..t} lf_s + ip_j = bcum_t - bcum_j + ip_j  (j <= t)
+    w = bcum[:, :, None, :] - bcum[:, None, :, :] + ip[:, None, :, :]  # (B,T,J,H)
+    tri = jnp.tril(jnp.ones((cc, cc), bool))
+    w = jnp.where(tri[None, :, :, None], w, NEG_INF)
+    inter = bcum + m[:, None, :]                              # (B,T,H)
+    m_t = jnp.maximum(jnp.max(w, axis=2), inter)              # (B,T,H)
+    m_t = jnp.maximum(m_t, -NEG_INF * 0.0)                    # no-op, keep f32
+
+    wexp = jnp.exp(w - m_t[:, :, None, :])                    # (B,T,J,H)
+    scores = jnp.einsum("bthd,bjhd->btjh", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (dh ** -0.5)
+    num_intra = jnp.einsum("btjh,btjh,bjhd->bthd", scores, wexp,
+                           v.astype(jnp.float32))
+    den_intra = jnp.einsum("btjh,btjh->bth", scores, wexp)
+
+    inter_scale = jnp.exp(inter - m_t)                        # (B,T,H)
+    qC = jnp.einsum("bthd,bhde->bthe", q.astype(jnp.float32) * dh ** -0.5, C)
+    qn = jnp.einsum("bthd,bhd->bth", q.astype(jnp.float32) * dh ** -0.5, n)
+    num = num_intra + inter_scale[..., None] * qC
+    den = den_intra + inter_scale * qn
+    hdn = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+    h_out = num / hdn[..., None]                              # (B,T,H,dh)
+
+    # state update
+    m_next = jnp.maximum(m + total, jnp.max(total[:, None] - bcum + ip, axis=1))
+    kv_w = jnp.exp(total[:, None] - bcum + ip - m_next[:, None])   # (B,T,H)
+    C_new = (jnp.exp(m + total - m_next)[:, :, None, None] * C
+             + jnp.einsum("bth,bthd,bthe->bhde", kv_w, k.astype(jnp.float32),
+                          v.astype(jnp.float32)))
+    n_new = (jnp.exp(m + total - m_next)[:, :, None] * n
+             + jnp.einsum("bth,bthd->bhd", kv_w, k.astype(jnp.float32)))
+    return (C_new, n_new, m_next), h_out
+
+
+def mlstm_apply(params: Dict, x: jax.Array, cfg: ArchConfig, mesh, rules, *,
+                mode: str = "train", cache: Optional[Dict] = None,
+                chunk: int = 256) -> Tuple[jax.Array, Optional[Dict]]:
+    def cons(t, axes):
+        return sharding.constrain(t, axes, mesh, rules) if mesh else t
+
+    b, s, d = x.shape
+    h, dh = cfg.num_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    i_pre = jnp.einsum("bsd,dh->bsh", x, params["wi"].astype(x.dtype))
+    f_pre = jnp.einsum("bsd,dh->bsh", x, params["wf"].astype(x.dtype)) + 1.0
+    og = jax.nn.sigmoid(
+        jnp.einsum("bsd,dhk->bshk", x, params["wo_gate"].astype(x.dtype)))
+
+    if mode == "decode":
+        assert cache is not None
+        carry = (cache["C"], cache["n"], cache["m"])
+        (C, n, m), h_out = _mlstm_chunk_step(
+            carry, (q, k, v, i_pre, f_pre), dh)
+        new_cache = {"C": C, "n": n, "m": m}
+        hs = h_out
+    else:
+        chunk = min(chunk, s)
+        nc = s // chunk
+
+        def reshape_c(t):
+            return jnp.moveaxis(
+                t.reshape(b, nc, chunk, *t.shape[2:]), 1, 0)
+
+        xs = tuple(reshape_c(t) for t in (q, k, v, i_pre, f_pre))
+        carry0 = (jnp.zeros((b, h, dh, dh), jnp.float32),
+                  jnp.zeros((b, h, dh), jnp.float32),
+                  jnp.zeros((b, h), jnp.float32))
+        if cfg.force_unroll:
+            carry = carry0
+            outs = []
+            for j in range(s // chunk):
+                carry, hj = _mlstm_chunk_step(
+                    carry, tuple(t[j] for t in xs), dh)
+                outs.append(hj)
+            (C, n, m), h_chunks = carry, jnp.stack(outs)
+        else:
+            (C, n, m), h_chunks = jax.lax.scan(
+                lambda c, i: _mlstm_chunk_step(c, i, dh), carry0, xs)
+        hs = jnp.moveaxis(h_chunks, 0, 1).reshape(b, s, h, dh)
+        new_cache = {"C": C, "n": n, "m": m} if mode == "prefill" else None
+
+    out = (hs.astype(x.dtype) * og)
+    out = cons(out, ("batch", "seq", "heads", "head_dim"))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return cons(y, ("batch", "seq", "embed")), new_cache
+
+
+def mlstm_cache_spec(cfg: ArchConfig, batch: int) -> Dict[str, Any]:
+    h, dh = cfg.num_heads, cfg.resolved_head_dim
+    return {
+        "C": ParamSpec((batch, h, dh, dh), ("batch", "heads", None, None),
+                       init="zeros", dtype="float32"),
+        "n": ParamSpec((batch, h, dh), ("batch", "heads", None),
+                       init="zeros", dtype="float32"),
+        "m": ParamSpec((batch, h), ("batch", "heads"),
+                       init="zeros", dtype="float32"),
+    }
+
+
+# ----------------------------------------------------------------------------
+# sLSTM (scalar-memory LSTM with block-diagonal recurrence)
+# ----------------------------------------------------------------------------
+
+def slstm_spec(cfg: ArchConfig) -> Dict[str, Any]:
+    d, h = cfg.d_model, cfg.num_heads
+    dh = cfg.resolved_head_dim
+    gates = {}
+    for gname in ("z", "i", "f", "o"):
+        gates[f"w_{gname}"] = ParamSpec((d, h, dh), ("embed", "heads", "head_dim"))
+        gates[f"r_{gname}"] = ParamSpec((h, dh, dh), ("heads", None, None),
+                                        scale=0.5)
+        gates[f"b_{gname}"] = ParamSpec((h, dh), ("heads", None), init="zeros")
+    gates["wo"] = ParamSpec((h, dh, d), ("heads", "head_dim", "embed"))
+    return gates
+
+
+def _slstm_step(params, carry, xg):
+    """carry: c,n,h,m all (B,H,dh) f32; xg: pre-computed x-projections."""
+    c, n, hp, m = carry
+    xz, xi, xf, xo = xg
+
+    def rec(name, h_):
+        return jnp.einsum("bhd,hde->bhe", h_, params[f"r_{name}"].astype(jnp.float32)
+                          ) + params[f"b_{name}"].astype(jnp.float32)
+
+    z = jnp.tanh(xz + rec("z", hp))
+    i_log = xi + rec("i", hp)
+    f_log = jax.nn.log_sigmoid(xf + rec("f", hp))
+    o = jax.nn.sigmoid(xo + rec("o", hp))
+    m_new = jnp.maximum(f_log + m, i_log)
+    i_s = jnp.exp(i_log - m_new)
+    f_s = jnp.exp(f_log + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_apply(params: Dict, x: jax.Array, cfg: ArchConfig, mesh, rules, *,
+                mode: str = "train", cache: Optional[Dict] = None
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    def cons(t, axes):
+        return sharding.constrain(t, axes, mesh, rules) if mesh else t
+
+    b, s, d = x.shape
+    h, dh = cfg.num_heads, cfg.resolved_head_dim
+    xp = {}
+    for g in ("z", "i", "f", "o"):
+        xp[g] = jnp.einsum("bsd,dhk->bshk", x,
+                           params[f"w_{g}"].astype(x.dtype)).astype(jnp.float32)
+
+    if mode == "decode":
+        assert cache is not None
+        carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+        xg = tuple(xp[g][:, 0] for g in ("z", "i", "f", "o"))
+        carry, h_new = _slstm_step(params, carry, xg)
+        hs = h_new[:, None]
+        new_cache = dict(zip(("c", "n", "h", "m"), carry))
+    else:
+        xs = tuple(jnp.moveaxis(xp[g], 1, 0) for g in ("z", "i", "f", "o"))
+        carry0 = tuple(jnp.zeros((b, h, dh), jnp.float32) for _ in range(4))
+        carry, h_seq = jax.lax.scan(
+            lambda c, xg: _slstm_step(params, c, xg), carry0, xs)
+        hs = jnp.moveaxis(h_seq, 0, 1)
+        new_cache = dict(zip(("c", "n", "h", "m"), carry)) \
+            if mode == "prefill" else None
+
+    y = jnp.einsum("bshk,hkd->bsd", hs.astype(x.dtype),
+                   params["wo"].astype(x.dtype))
+    return cons(y, ("batch", "seq", "embed")), new_cache
+
+
+def slstm_cache_spec(cfg: ArchConfig, batch: int) -> Dict[str, Any]:
+    h, dh = cfg.num_heads, cfg.resolved_head_dim
+    leaf = ParamSpec((batch, h, dh), ("batch", "heads", None), init="zeros",
+                     dtype="float32")
+    return {"c": leaf, "n": leaf, "h": leaf, "m": leaf}

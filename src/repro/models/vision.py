@@ -1,0 +1,169 @@
+"""The paper's model zoo: VGG16 / ResNet sparse-BNNs with the P2M first layer.
+
+First layer = the in-pixel P2MConv (paper's technique: hardware conv + VC-MTJ
+binary activation); every later conv uses BN + the same Hoyer binary spike
+(the "sparse BNN" of §2.3, Table 1). Weights are 4-bit fake-quantized.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hoyer, p2m
+from repro.models.params import ParamSpec, abstract_tree, axes_tree, init_tree
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionConfig:
+    name: str = "vgg16_cifar10"
+    arch: str = "vgg16"       # vgg16 | vgg_tiny | resnet18 | resnet20
+    num_classes: int = 10
+    in_hw: int = 32
+    p2m: p2m.P2MConfig = p2m.P2MConfig()
+    weight_bits: int = 4
+    remove_first_maxpool: bool = False   # paper's Model* variants
+    hoyer_coeff: float = 1e-8
+
+
+_VGG_PLANS = {
+    "vgg16": [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+              512, 512, 512, "M", 512, 512, 512, "M"],
+    # benchmark-scale variant: same structure (P2M front + binary conv
+    # stack + pools), CPU-trainable in minutes
+    "vgg_tiny": [32, "M", 64, "M", 64, "M"],
+}
+_RESNET_PLAN = {"resnet18": (2, 2, 2, 2), "resnet20": (3, 3, 3)}
+
+
+def _conv_spec(cin: int, cout: int, k: int = 3) -> Dict[str, Any]:
+    return {
+        "w": ParamSpec((k, k, cin, cout), (None, None, "channels", "channels")),
+        "bn_scale": ParamSpec((cout,), ("channels",), init="ones"),
+        "bn_bias": ParamSpec((cout,), ("channels",), init="zeros"),
+        "v_th": ParamSpec((), (), init="ones"),
+    }
+
+
+def _conv_apply(params: Dict, x: jax.Array, stride: int, bits: int,
+                binary: bool = True) -> Tuple[jax.Array, jax.Array]:
+    w = p2m.quantize_weights(params["w"], bits)
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    mu = jnp.mean(y, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(y, axis=(0, 1, 2), keepdims=True)
+    y = (y - mu) / jnp.sqrt(var + 1e-5)
+    y = y * params["bn_scale"] + params["bn_bias"]
+    if not binary:
+        return jax.nn.relu(y), jnp.zeros(())
+    o, hl = hoyer.hoyer_spike(y, params["v_th"])
+    return o, hl
+
+
+def _maxpool(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "SAME")
+
+
+def model_spec(cfg: VisionConfig) -> Dict[str, Any]:
+    spec: Dict[str, Any] = {
+        "p2m": {
+            "w": ParamSpec((cfg.p2m.kernel_size, cfg.p2m.kernel_size,
+                            cfg.p2m.in_channels, cfg.p2m.out_channels),
+                           ("pixel", "pixel", "channels", "channels")),
+            "v_th": ParamSpec((), (), init="ones"),
+        },
+    }
+    c_in = cfg.p2m.out_channels
+    layers: Dict[str, Any] = {}
+    if cfg.arch.startswith("vgg"):
+        i = 0
+        for item in _VGG_PLANS[cfg.arch]:
+            if item == "M":
+                continue
+            layers[f"conv{i}"] = _conv_spec(c_in, item)
+            c_in = item
+            i += 1
+        feat = c_in
+    else:
+        blocks_per = _RESNET_PLAN[cfg.arch]
+        widths = [64 * (2 ** i) for i in range(len(blocks_per))] \
+            if cfg.arch == "resnet18" else [16, 32, 64]
+        for si, (n, w) in enumerate(zip(blocks_per, widths)):
+            for bi in range(n):
+                blk = {"c1": _conv_spec(c_in, w), "c2": _conv_spec(w, w)}
+                if c_in != w:
+                    blk["proj"] = _conv_spec(c_in, w, k=1)
+                layers[f"s{si}b{bi}"] = blk
+                c_in = w
+        feat = c_in
+    spec["layers"] = layers
+    spec["head"] = {"w": ParamSpec((feat, cfg.num_classes),
+                                   ("channels", None)),
+                    "b": ParamSpec((cfg.num_classes,), (None,), init="zeros")}
+    return spec
+
+
+def init_params(key: jax.Array, cfg: VisionConfig):
+    return init_tree(key, model_spec(cfg), jnp.float32)
+
+
+def forward(params: Dict, images: jax.Array, cfg: VisionConfig, *,
+            mode: str = "train", key: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array, Dict]:
+    """images: (B, H, W, C) in [0, 1]. Returns (logits, hoyer_loss, aux)."""
+    hoyer_total = jnp.zeros(())
+    if mode == "hardware":
+        x = p2m.forward_hardware(params["p2m"], images, cfg.p2m, key)
+    else:
+        # key enables the Fig. 8 stochastic-switching noise injection when
+        # cfg.p2m.noise_p_* are set
+        x, hl = p2m.forward_train(params["p2m"], images, cfg.p2m, key=key)
+        hoyer_total += hl
+    p2m_sparsity = p2m.output_sparsity(x)
+
+    if cfg.arch.startswith("vgg"):
+        i = 0
+        first_pool = True
+        for item in _VGG_PLANS[cfg.arch]:
+            if item == "M":
+                if first_pool and cfg.remove_first_maxpool:
+                    first_pool = False
+                    continue
+                first_pool = False
+                if x.shape[1] > 1:
+                    x = _maxpool(x)
+                continue
+            x, hl = _conv_apply(params["layers"][f"conv{i}"], x, 1,
+                                cfg.weight_bits)
+            hoyer_total += hl
+            i += 1
+    else:
+        names = sorted(params["layers"].keys())
+        for name in names:
+            blk = params["layers"][name]
+            stride = 1
+            h, hl1 = _conv_apply(blk["c1"], x, stride, cfg.weight_bits)
+            h, hl2 = _conv_apply(blk["c2"], h, 1, cfg.weight_bits)
+            sc = x
+            if "proj" in blk:
+                sc, _ = _conv_apply(blk["proj"], x, stride, cfg.weight_bits,
+                                    binary=False)
+            x = h + sc
+            hoyer_total += hl1 + hl2
+
+    x = jnp.mean(x, axis=(1, 2))
+    logits = x @ params["head"]["w"] + params["head"]["b"]
+    aux = {"p2m_sparsity": p2m_sparsity}
+    return logits, cfg.hoyer_coeff * hoyer_total, aux
+
+
+def loss_fn(params, batch, cfg: VisionConfig, key=None):
+    logits, hloss, aux = forward(params, batch["image"], cfg)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.mean(jnp.take_along_axis(logp, batch["label"][:, None], 1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["label"]).astype(jnp.float32))
+    return nll + hloss, {"loss": nll, "acc": acc, **aux}

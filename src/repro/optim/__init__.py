@@ -1,0 +1,4 @@
+from repro.optim.optimizer import (OptState, init_opt_state, apply_updates,
+                                   lr_schedule)
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     compressed_psum_bytes)

@@ -1,0 +1,57 @@
+"""Int8 gradient compression with error feedback (beyond-paper DP trick).
+
+The data-parallel all-reduce moves 2 bytes/param (bf16). Quantizing gradients
+to int8 with a per-tensor scale halves DP collective bytes; the residual
+(quantization error) is fed back into the next step's gradient so the scheme
+is unbiased over time (error-feedback SGD, Karimireddy et al. 2019).
+
+Used by train/loop.py when OptimizerConfig.grad_compression is on; the
+collective-bytes delta is measured in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jax.Array, residual: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (q_int8, scale, new_residual). g + residual ~= q * scale."""
+    g32 = g.astype(jnp.float32) + residual
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    new_residual = g32 - q.astype(jnp.float32) * scale
+    return q, scale, new_residual
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def tree_compress(grads, residuals):
+    """Compress a whole gradient pytree. Returns (q_tree, scale_tree, res)."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(residuals)
+    qs, ss, rs = [], [], []
+    for g, r in zip(flat_g, flat_r):
+        q, s, nr = compress_int8(g, r)
+        qs.append(q)
+        ss.append(s)
+        rs.append(nr)
+    return (tdef.unflatten(qs), tdef.unflatten(ss), tdef.unflatten(rs))
+
+
+def tree_decompress(q_tree, scale_tree):
+    return jax.tree.map(decompress_int8, q_tree, scale_tree)
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum_bytes(params) -> Tuple[int, int]:
+    """(bf16 all-reduce bytes, int8 all-reduce bytes) for napkin math."""
+    n = sum(int(jnp.size(p)) for p in jax.tree.leaves(params))
+    return 2 * n, n

@@ -1,0 +1,1 @@
+from repro.serving.engine import ServingEngine, make_prefill_step, make_decode_step

@@ -1,0 +1,94 @@
+"""Batched serving engine: prefill -> KV cache -> greedy/sampled decode.
+
+Cache kinds per mixer (see models/lm.py cache specs):
+  * full attention: (B, max_len, Hkv, Dh) K/V, sharded kv_heads on "model";
+  * local attention: ring buffer of size ``window`` (long_500k feasible);
+  * MLA: rank-r latent cache (B, max_len, kv_lora) — the DeepSeek trick;
+  * RG-LRU / mLSTM / sLSTM: O(1) recurrent state.
+
+``make_prefill_step`` / ``make_decode_step`` are what the multi-pod dry-run
+lowers for the prefill_32k / decode_32k / long_500k shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro import sharding
+from repro.configs.base import ArchConfig
+from repro.models import lm
+
+
+def make_prefill_step(cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                      rules=None):
+    def prefill(params, tokens, encoder_embeddings=None):
+        logits, cache = lm.forward(params, tokens, cfg, mesh, rules,
+                                   mode="prefill",
+                                   encoder_embeddings=encoder_embeddings)
+        return logits[:, -1], cache
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, mesh: Optional[Mesh] = None, rules=None,
+                     temperature: float = 0.0):
+    def decode(params, cache, tokens, rng=None):
+        """tokens: (B, 1) current token. Returns (next_token, new_cache)."""
+        logits, new_cache = lm.forward(params, tokens, cfg, mesh, rules,
+                                       mode="decode", cache=cache)
+        logits = logits[:, -1].astype(jnp.float32)
+        if temperature > 0.0 and rng is not None:
+            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt[:, None].astype(jnp.int32), new_cache
+    return decode
+
+
+def pad_prefill_cache(cfg: ArchConfig, prefill_cache, batch: int,
+                      max_len: int):
+    """Grow a seq-sized prefill cache into a max_len decode cache."""
+    target = lm.init_cache(cfg, batch, max_len)
+
+    def merge(dst, src):
+        if dst.ndim == 0 or dst.shape == src.shape:
+            return jnp.asarray(src, dst.dtype).reshape(dst.shape)
+        sl = tuple(slice(0, min(a, b)) for a, b in zip(dst.shape, src.shape))
+        src_sl = tuple(slice(0, min(a, b)) for a, b in
+                       zip(dst.shape, src.shape))
+        return dst.at[sl].set(src[src_sl].astype(dst.dtype))
+
+    return jax.tree.map(merge, target, prefill_cache)
+
+
+class ServingEngine:
+    """Synchronous batched engine: enqueue requests, run prefill + decode."""
+
+    def __init__(self, cfg: ArchConfig, params, max_len: int = 512,
+                 mesh: Optional[Mesh] = None, temperature: float = 0.0):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.rules = sharding.ShardingRules.make(dict(cfg.rule_overrides))
+        self.prefill = jax.jit(make_prefill_step(cfg, mesh, self.rules))
+        self.decode = jax.jit(
+            make_decode_step(cfg, mesh, self.rules, temperature))
+
+    def generate(self, prompts: jax.Array, max_new_tokens: int,
+                 encoder_embeddings: Optional[jax.Array] = None,
+                 rng: Optional[jax.Array] = None) -> jax.Array:
+        """prompts: (B, S) int32. Returns (B, max_new_tokens)."""
+        b = prompts.shape[0]
+        last_logits, cache = self.prefill(
+            self.params, prompts, encoder_embeddings)
+        cache = pad_prefill_cache(self.cfg, cache, b, self.max_len)
+        tok = jnp.argmax(last_logits, axis=-1)[:, None].astype(jnp.int32)
+        out = [tok]
+        for i in range(max_new_tokens - 1):
+            step_rng = jax.random.fold_in(rng, i) if rng is not None else None
+            tok, cache = self.decode(self.params, cache, tok, step_rng)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)

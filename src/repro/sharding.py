@@ -1,0 +1,126 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter/activation dimension carries a *logical* axis name; a rule
+table maps logical names to mesh axes. Changing the table re-shards the whole
+model — this is the primary §Perf hillclimbing lever.
+
+Mesh axes: ("pod", "data", "model") multi-pod, ("data", "model") single-pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# logical axis -> mesh axes. None = replicated.
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "seq": None,             # set to "model" for sequence parallelism
+    "embed": None,
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "expert": "model",
+    "expert_ffn": None,
+    "kv_lora": None,
+    "cache_seq": None,       # set to "model" to sequence-shard KV caches
+    "rnn": "model",          # recurrent inner width
+    "conv": None,
+    "pixel": None,           # P2M front-end tensors stay local to the sensor
+    "channels": None,
+    "stack": None,           # scan-stacked layer axis: never sharded
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: Tuple[Tuple[str, MeshAxes], ...] = tuple(sorted(DEFAULT_RULES.items()))
+
+    @staticmethod
+    def make(overrides: Optional[Dict[str, MeshAxes]] = None) -> "ShardingRules":
+        d = dict(DEFAULT_RULES)
+        if overrides:
+            d.update(overrides)
+        return ShardingRules(tuple(sorted(d.items())))
+
+    def lookup(self, logical: str) -> MeshAxes:
+        return dict(self.rules).get(logical)
+
+
+def _axes_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def logical_to_spec(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: ShardingRules,
+) -> P:
+    """Build a PartitionSpec, replicating any dim that does not divide evenly
+    or whose mesh axis is absent from the mesh."""
+    spec = []
+    used: set = set()
+    for name, dim in zip(logical_axes, shape):
+        axes = rules.lookup(name) if name else None
+        if axes is None:
+            spec.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+        if not axes:
+            spec.append(None)
+            continue
+        size = _axes_size(mesh, axes)
+        if dim % size != 0:
+            # keep the largest prefix of axes that divides evenly
+            while axes and dim % _axes_size(mesh, axes) != 0:
+                axes = axes[:-1]
+        if not axes:
+            spec.append(None)
+            continue
+        used.update(axes)
+        spec.append(axes if len(axes) > 1 else axes[0])
+    return P(*spec)
+
+
+def tree_shardings(logical_tree, shape_tree, mesh: Mesh, rules: ShardingRules):
+    """Map a pytree of logical-axis tuples + matching shapes -> NamedShardings."""
+    def one(axes, sds):
+        return NamedSharding(mesh, logical_to_spec(axes, sds.shape, mesh, rules))
+    return jax.tree.map(one, logical_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(a, (str, type(None))) for a in x))
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]],
+              mesh: Mesh, rules: ShardingRules) -> jax.Array:
+    """with_sharding_constraint via logical names (no-op outside a mesh ctx)."""
+    try:
+        spec = logical_to_spec(logical_axes, x.shape, mesh, rules)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except Exception:
+        return x
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def model_axis(mesh: Mesh) -> Optional[str]:
+    return "model" if "model" in mesh.shape else None

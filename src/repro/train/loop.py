@@ -1,0 +1,159 @@
+"""Fault-tolerant distributed training loop.
+
+Features (all exercised by tests/test_train_loop.py):
+  * jit-compiled train step with donated params/opt-state, logical-axis
+    shardings, microbatch gradient accumulation (lax.scan over microbatches —
+    one DP all-reduce per step regardless of accumulation factor);
+  * checkpoint/restart: periodic async checkpoints (params, optimizer,
+    data-pipeline state); ``Trainer.restore_or_init`` resumes from the latest
+    intact checkpoint — including onto a *different* mesh (elastic restart
+    after node failure);
+  * NaN guard: non-finite loss skips the update (params unchanged) and counts
+    the skip — a single corrupted batch / flaky node cannot poison training;
+  * preemption hook: ``request_stop()`` (wire to SIGTERM) checkpoints at the
+    next step boundary — straggler/maintenance-safe;
+  * optional int8 gradient compression with error feedback for the DP
+    all-reduce (OptimizerConfig.grad_compression).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import sharding
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ArchConfig, OptimizerConfig, RunConfig
+from repro.models import lm
+from repro.models.params import axes_tree
+from repro.optim import compression
+from repro.optim.optimizer import OptState, apply_updates, init_opt_state
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptimizerConfig,
+                    mesh: Optional[Mesh] = None,
+                    rules: Optional[sharding.ShardingRules] = None,
+                    microbatches: int = 1,
+                    loss_fn: Optional[Callable] = None):
+    """Build the (jit-able) train step: (params, opt, batch) -> new, metrics.
+
+    With microbatches > 1 the global batch is split along axis 0 and gradients
+    are accumulated in a lax.scan — activation memory scales with the
+    microbatch, collectives fire once.
+    """
+    loss_fn = loss_fn or (lambda p, b: lm.lm_loss(p, b, cfg, mesh, rules))
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def step(params, opt: OptState, batch, residuals=None):
+        if microbatches > 1:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mbatch):
+                gacc, lacc = carry
+                loss, _, grads = grads_of(params, mbatch)
+                gacc = jax.tree.map(jnp.add, gacc, grads)
+                return (gacc, lacc + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {"loss": loss, "ppl": jnp.exp(loss)}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        new_res = residuals
+        if opt_cfg.grad_compression and residuals is not None:
+            q, s, new_res = compression.tree_compress(grads, residuals)
+            grads = compression.tree_decompress(q, s)
+
+        finite = jnp.isfinite(loss)
+        new_params, new_opt, opt_metrics = apply_updates(
+            params, grads, opt, opt_cfg)
+        # NaN guard: keep old state if the loss was non-finite
+        new_params = jax.tree.map(
+            lambda n, o: jnp.where(finite, n, o), new_params, params)
+        new_opt = jax.tree.map(
+            lambda n, o: jnp.where(finite, n, o), new_opt, opt)
+        metrics = {**metrics, **opt_metrics,
+                   "skipped": (~finite).astype(jnp.int32)}
+        if new_res is not None:
+            return new_params, new_opt, metrics, new_res
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh,
+                    rules: sharding.ShardingRules):
+    from repro.models.params import abstract_tree
+    spec = lm.model_spec(cfg)
+    return sharding.tree_shardings(
+        axes_tree(spec),
+        jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                     spec, is_leaf=lambda x: hasattr(x, "axes")),
+        mesh, rules)
+
+
+class Trainer:
+    """Drives the loop: data -> step -> metrics -> checkpoints -> restart."""
+
+    def __init__(self, run: RunConfig, stream, mesh: Optional[Mesh] = None,
+                 loss_fn: Optional[Callable] = None):
+        self.run = run
+        self.cfg = run.arch
+        self.stream = stream
+        self.mesh = mesh
+        self.rules = sharding.ShardingRules.make(dict(self.cfg.rule_overrides))
+        self.ckpt = CheckpointManager(run.checkpoint_dir,
+                                      keep=run.keep_checkpoints)
+        self._stop = False
+        self.step_fn = jax.jit(make_train_step(
+            self.cfg, run.optimizer, mesh, self.rules, run.microbatches,
+            loss_fn), donate_argnums=(0, 1))
+        self.history: list = []
+
+    def request_stop(self):   # wire to SIGTERM for preemption handling
+        self._stop = True
+
+    def restore_or_init(self, init_params_fn) -> Tuple[Any, OptState, int]:
+        latest = self.ckpt.latest_step()
+        params = init_params_fn()
+        opt = init_opt_state(params, self.run.optimizer)
+        if latest is None:
+            return params, opt, 0
+        opt_d = {"step": opt.step, "mu": opt.mu, "nu": opt.nu}
+        restored, extra = self.ckpt.restore(
+            latest, {"params": params, "opt": opt_d})
+        self.stream.load_state_dict(extra["pipeline"])
+        return restored["params"], OptState(**restored["opt"]), latest
+
+    def fit(self, params, opt: OptState, start_step: int, num_steps: int):
+        step = start_step
+        while step < num_steps and not self._stop:
+            batch = self.stream.next_batch()
+            params, opt, metrics = self.step_fn(params, opt, batch)
+            step += 1
+            if step % self.run.log_every == 0 or step == num_steps:
+                self.history.append(
+                    {k: float(v) for k, v in metrics.items()})
+            if step % self.run.checkpoint_every == 0 or self._stop \
+                    or step == num_steps:
+                opt_d = {"step": opt.step, "mu": opt.mu, "nu": opt.nu}
+                self.ckpt.save(step, {"params": params, "opt": opt_d},
+                               extra={"pipeline": self.stream.state_dict()})
+        self.ckpt.wait()
+        return params, opt, step

@@ -1,0 +1,102 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For each assigned architecture: instantiate a REDUCED config of the same
+family, run one forward + one train-grad step + one prefill->decode step on
+CPU, assert output shapes and no NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.reduced import reduced
+from repro.models import lm
+
+ARCH_IDS = sorted(configs.ARCHS)
+
+
+def _batch(cfg, b=2, s=32):
+    key = jax.random.PRNGKey(0)
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    out = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    if cfg.is_encdec:
+        out["encoder_embeddings"] = jax.random.normal(
+            key, (b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return out
+
+
+@pytest.fixture(scope="module")
+def params_cache():
+    store = {}
+
+    def get(name):
+        if name not in store:
+            cfg = reduced(configs.get_arch(name))
+            store[name] = (cfg, lm.init_params(jax.random.PRNGKey(1), cfg))
+        return store[name]
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_no_nan(arch, params_cache):
+    cfg, params = params_cache(arch)
+    batch = _batch(cfg)
+    logits, _ = lm.forward(params, batch["tokens"], cfg,
+                           encoder_embeddings=batch.get("encoder_embeddings"))
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_grad_step(arch, params_cache):
+    cfg, params = params_cache(arch)
+    batch = _batch(cfg)
+
+    def loss(p):
+        return lm.lm_loss(p, batch, cfg)[0]
+
+    val, grads = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(val))
+    gnorm = jax.tree.reduce(
+        lambda a, g: a + float(jnp.sum(jnp.abs(g))), grads, 0.0)
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_then_decode(arch, params_cache):
+    cfg, params = params_cache(arch)
+    b, s = 2, 16
+    batch = _batch(cfg, b, s)
+    logits_pf, cache = lm.forward(
+        params, batch["tokens"], cfg, mode="prefill",
+        encoder_embeddings=batch.get("encoder_embeddings"))
+    assert cache is not None and int(cache["pos"]) == s
+
+    # decode one token against a fresh max-len cache primed by teacher forcing
+    # (prefill caches are seq-sized; the serving engine pads — here we just
+    # check the decode path runs and matches shapes)
+    dec_cache = lm.init_cache(cfg, b, max_len=s + 8)
+    next_tok = batch["tokens"][:, :1]
+    logits_dec, new_cache = lm.forward(params, next_tok, cfg, mode="decode",
+                                       cache=_prime(dec_cache, cache))
+    assert logits_dec.shape == (b, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits_dec)))
+    assert int(new_cache["pos"]) == int(cache["pos"]) + 1
+
+
+def _prime(dec_cache, prefill_cache):
+    """Copy prefill state into the (larger) decode cache where shapes allow."""
+
+    def merge(dst, src):
+        if dst.ndim == 0:
+            return jnp.asarray(src, dst.dtype)
+        if dst.shape == src.shape:
+            return src.astype(dst.dtype)
+        if dst.ndim >= 2 and src.ndim == dst.ndim:
+            sl = tuple(slice(0, min(a, b)) for a, b in zip(dst.shape, src.shape))
+            return dst.at[sl].set(src[sl].astype(dst.dtype))
+        return dst
+
+    out = jax.tree.map(merge, dec_cache, prefill_cache)
+    return out

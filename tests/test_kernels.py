@@ -1,0 +1,140 @@
+"""Per-kernel validation (deliverable c): shape/dtype sweeps, allclose vs the
+pure-jnp oracles in kernels/ref.py, run in interpret=True mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import p2m as p2m_core
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.p2m_conv import p2m_conv_pallas
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize("s", [64, 128, 256])
+    @pytest.mark.parametrize("d", [16, 64])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep_causal(self, s, d, dtype):
+        key = jax.random.PRNGKey(0)
+        b, h = 2, 2
+        q, k, v = (jax.random.normal(jax.random.fold_in(key, i),
+                                     (b, s, h, d)).astype(dtype)
+                   for i in range(3))
+        out = ops.flash_attention(q, k, v, causal=True, block_q=32,
+                                  block_kv=32)
+        r = ref.flash_attention_ref(q, k, v, causal=True)
+        atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(r, np.float32), atol=atol)
+
+    def test_non_causal(self):
+        key = jax.random.PRNGKey(1)
+        q, k, v = (jax.random.normal(jax.random.fold_in(key, i),
+                                     (1, 128, 4, 32)) for i in range(3))
+        out = ops.flash_attention(q, k, v, causal=False, block_q=32,
+                                  block_kv=64)
+        r = ref.flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(r), atol=2e-5)
+
+    def test_gqa_expansion(self):
+        key = jax.random.PRNGKey(2)
+        q = jax.random.normal(key, (1, 64, 8, 16))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 64, 2, 16))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, 64, 2, 16))
+        out = ops.flash_attention(q, k, v, causal=True, block_q=16,
+                                  block_kv=16)
+        kf = jnp.repeat(k, 4, axis=2)
+        vf = jnp.repeat(v, 4, axis=2)
+        r = ref.flash_attention_ref(q, kf, vf, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(r), atol=2e-5)
+
+    def test_block_shape_invariance(self):
+        key = jax.random.PRNGKey(3)
+        q, k, v = (jax.random.normal(jax.random.fold_in(key, i),
+                                     (1, 128, 2, 32)) for i in range(3))
+        a = flash_attention_pallas(q, k, v, causal=True, block_q=32,
+                                   block_kv=64)
+        b = flash_attention_pallas(q, k, v, causal=True, block_q=128,
+                                   block_kv=32)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+    def test_matches_model_layer_implementation(self):
+        """Kernel == the pure-JAX chunked scan used in models/blocks.py."""
+        from repro.models import blocks
+        key = jax.random.PRNGKey(4)
+        q, k, v = (jax.random.normal(jax.random.fold_in(key, i),
+                                     (2, 64, 4, 16)) for i in range(3))
+        kern = ops.flash_attention(q, k, v, causal=True, block_q=16,
+                                   block_kv=16)
+        scan = blocks.flash_attention(q, k, v, causal=True, q_chunk=16,
+                                      kv_chunk=16)
+        np.testing.assert_allclose(np.asarray(kern), np.asarray(scan),
+                                   atol=2e-5)
+
+
+class TestP2MConvKernel:
+    def _data(self, seed=0, b=2, hw=16, cin=3, cout=32, k=3):
+        key = jax.random.PRNGKey(seed)
+        img = jax.random.uniform(key, (b, hw, hw, cin))
+        w = jax.random.normal(jax.random.fold_in(key, 1),
+                              (k, k, cin, cout)) * 0.3
+        return img, w
+
+    @pytest.mark.parametrize("cout", [8, 32, 64])
+    @pytest.mark.parametrize("hw", [16, 32])
+    def test_sweep_matches_oracle(self, cout, hw):
+        img, w = self._data(b=2, hw=hw, cout=cout)
+        theta = jnp.asarray(0.4)
+        key = jax.random.PRNGKey(9)
+        out = ops.p2m_conv(img, w, theta, key, block_n=128)
+        # oracle on the same patches + same bits
+        patches = ops.im2col(img, 3, 2)
+        wm = w.reshape(-1, cout)
+        bits = jax.random.bits(key, (patches.shape[0], cout), jnp.uint32)
+        r = ref.p2m_conv_ref(patches, wm, theta, bits)
+        np.testing.assert_array_equal(
+            np.asarray(out.reshape(-1, cout)), np.asarray(r))
+
+    def test_binary_output_and_sparsity(self):
+        img, w = self._data(seed=3)
+        out = ops.p2m_conv(img, w, jnp.asarray(1.0), jax.random.PRNGKey(0),
+                           block_n=128)
+        vals = set(np.unique(np.asarray(out)).tolist())
+        assert vals <= {0.0, 1.0}
+        assert 0.0 < float(jnp.mean(out)) < 1.0
+
+    def test_threshold_monotonicity(self):
+        """Higher threshold => fewer activations (statistically)."""
+        img, w = self._data(seed=4)
+        key = jax.random.PRNGKey(1)
+        lo = ops.p2m_conv(img, w, jnp.asarray(-0.5), key, block_n=128)
+        hi = ops.p2m_conv(img, w, jnp.asarray(1.5), key, block_n=128)
+        assert float(jnp.mean(hi)) < float(jnp.mean(lo))
+
+    def test_majority_fold_matches_explicit_mtj_sampling(self):
+        """One Bernoulli(P(Binom(8,p)>=4)) == sampling 8 MTJs + majority —
+        statistically: mean activation rates must agree within MC error."""
+        from repro.core import mtj
+        p = jnp.full((20000,), 0.7)
+        explicit = mtj.sample_majority_activation(jax.random.PRNGKey(0), p)
+        folded_q = ref.majority_prob_poly(p)
+        folded = (jax.random.uniform(jax.random.PRNGKey(1), p.shape)
+                  < folded_q).astype(jnp.float32)
+        assert abs(float(jnp.mean(explicit)) - float(jnp.mean(folded))) < 0.02
+
+    def test_kernel_pipeline_matches_core_p2m_statistics(self):
+        """Kernel activation rate ~ core/p2m.forward_hardware rate (same
+        device model, independent randomness)."""
+        img, w = self._data(seed=5, b=4, hw=32)
+        cfg = p2m_core.P2MConfig()
+        params = {"w": w, "v_th": jnp.asarray(1.0)}
+        hw_out = p2m_core.forward_hardware(params, img, cfg,
+                                           jax.random.PRNGKey(7))
+        from repro.core import hoyer
+        u = p2m_core.hardware_conv(img, w, cfg)
+        theta = hoyer.effective_threshold(u, params["v_th"]) * params["v_th"]
+        wq = p2m_core.quantize_weights(w, cfg.weight_bits)
+        k_out = ops.p2m_conv(img, wq, theta, jax.random.PRNGKey(8),
+                             block_n=128)
+        assert abs(float(jnp.mean(hw_out)) - float(jnp.mean(k_out))) < 0.05

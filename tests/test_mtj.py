@@ -1,0 +1,87 @@
+"""Device-model tests: VC-MTJ switching statistics (paper Figs. 2, 5, 6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mtj
+
+
+class TestSwitchingProbability:
+    def test_reproduces_measured_points(self):
+        """Fit passes exactly through the three measured device points."""
+        p = mtj.switching_probability(jnp.asarray(mtj.MEASURED_VOLTAGES), 700.0)
+        np.testing.assert_allclose(np.asarray(p), mtj.MEASURED_P_SW, atol=1e-6)
+
+    def test_monotone_in_voltage(self):
+        v = jnp.linspace(0.3, 1.3, 201)
+        p = np.asarray(mtj.switching_probability(v, 700.0))
+        assert np.all(np.diff(p) >= -1e-9)
+        assert p[0] < 0.01 and p[-1] > 0.97
+
+    def test_pulse_envelope_peaks_at_half_period(self):
+        p_700 = mtj.switching_probability(0.85, 700.0)
+        p_350 = mtj.switching_probability(0.85, 350.0)
+        p_100 = mtj.switching_probability(0.85, 100.0)
+        assert p_700 > p_350 > p_100
+
+    def test_low_voltage_rarely_switches(self):
+        """Below a few hundred mV: near-zero switching (paper §2.1)."""
+        assert float(mtj.switching_probability(0.3, 700.0)) < 1e-4
+
+    def test_reset_pulse_near_deterministic(self):
+        assert float(mtj.reset_probability()) > 0.9
+
+
+class TestMajority:
+    def test_fig5_error_below_0p1_percent(self):
+        """Fig. 5: 8 MTJs + majority push both error modes below 0.1%."""
+        fail, false = mtj.majority_error_rates(
+            p_should_switch=0.924, p_should_not=0.062, n=8, majority=4)
+        assert float(fail) < 1e-3
+        assert float(false) < 1e-3
+        # and the 0.9 V operating point is even better
+        fail9, _ = mtj.majority_error_rates(0.9717, 0.062, 8, 4)
+        assert float(fail9) < 1e-4
+
+    def test_single_device_errors_match_paper(self):
+        """Paper §2.2.3: single-device errors 6.2%/7.6%/2.9% at 0.7/0.8/0.9 V."""
+        fail, false = mtj.majority_error_rates(0.924, 0.062, n=1, majority=1)
+        np.testing.assert_allclose(float(false), 0.062, atol=1e-6)
+        np.testing.assert_allclose(float(fail), 0.076, atol=1e-6)
+
+    @given(p=st.floats(0.0, 1.0), n=st.integers(1, 16))
+    @settings(max_examples=50, deadline=None)
+    def test_majority_prob_is_valid_probability(self, p, n):
+        out = float(mtj.majority_activation_probability(jnp.asarray(p), n, max(1, n // 2)))
+        assert -1e-6 <= out <= 1 + 1e-6
+
+    @given(st.floats(0.05, 0.95))
+    @settings(max_examples=25, deadline=None)
+    def test_majority_monotone_in_p(self, p):
+        lo = float(mtj.majority_activation_probability(jnp.asarray(p), 8, 4))
+        hi = float(mtj.majority_activation_probability(jnp.asarray(min(p + 0.02, 1.0)), 8, 4))
+        assert hi >= lo - 1e-9
+
+    def test_monte_carlo_matches_analytic(self):
+        key = jax.random.PRNGKey(0)
+        p = jnp.full((20000,), 0.924)
+        acts = mtj.sample_majority_activation(key, p, 8, 4)
+        analytic = float(mtj.majority_activation_probability(jnp.asarray(0.924), 8, 4))
+        assert abs(float(jnp.mean(acts)) - analytic) < 0.01
+
+
+class TestBurstRead:
+    def test_tmr_exceeds_150_percent(self):
+        prm = mtj.DEFAULT_MTJ
+        assert (prm.r_ap - prm.r_p) / prm.r_p > 1.5
+
+    def test_read_distinguishes_states(self):
+        states = jnp.asarray([1.0, 1.0, 0.0, 0.0, 1.0, 1.0, 0.0, 1.0])  # Fig. 6
+        out = mtj.burst_read(states)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(states))
+
+    def test_read_voltage_below_disturb(self):
+        assert mtj.DEFAULT_MTJ.read_voltage < 0.3
+        assert float(mtj.switching_probability(mtj.DEFAULT_MTJ.read_voltage)) < 1e-6

@@ -1,0 +1,117 @@
+"""P2M layer + energy/bandwidth/latency model tests (paper §2.4, §3.2-3.4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import energy, mtj, p2m
+
+
+CFG = p2m.P2MConfig()
+
+
+def _params():
+    return p2m.init_params(jax.random.PRNGKey(0), CFG)
+
+
+class TestP2MConv:
+    def test_shapes_and_binary(self):
+        params = _params()
+        x = jax.random.uniform(jax.random.PRNGKey(1), (2, 32, 32, 3))
+        o, hl = p2m.forward_train(params, x, CFG)
+        assert o.shape == (2, 16, 16, 32)
+        assert set(np.unique(np.asarray(o)).tolist()) <= {0.0, 1.0}
+        assert np.isfinite(float(hl))
+
+    def test_weight_quantization_levels(self):
+        w = jax.random.normal(jax.random.PRNGKey(2), (3, 3, 3, 8))
+        wq = p2m.quantize_weights(w, 4)
+        scale = float(jnp.max(jnp.abs(w))) / 7.0
+        levels = np.unique(np.round(np.asarray(wq) / scale))
+        assert len(levels) <= 15  # 4-bit symmetric
+
+    def test_gradients_flow_to_weights_and_threshold(self):
+        params = _params()
+        x = jax.random.uniform(jax.random.PRNGKey(3), (1, 16, 16, 3))
+
+        def loss(p):
+            o, hl = p2m.forward_train(p, x, CFG)
+            return jnp.mean(o * jnp.ones_like(o)) + hl
+        g = jax.grad(loss)(params)
+        assert float(jnp.sum(jnp.abs(g["w"]))) > 0
+
+    def test_hardware_mode_close_to_train_mode(self):
+        """Majority-of-8 hardware sim ~ deterministic threshold (Fig. 5)."""
+        params = _params()
+        x = jax.random.uniform(jax.random.PRNGKey(4), (4, 32, 32, 3))
+        o_det, _ = p2m.forward_train(params, x, CFG)
+        o_hw = p2m.forward_hardware(params, x, CFG, jax.random.PRNGKey(5))
+        # the paper's guarantee holds for activations with voltage margin:
+        # Hoyer training pushes pre-activations away from the threshold, and
+        # the 8-MTJ majority makes errors < 0.1% there (Fig. 5). Random
+        # (untrained) weights put mass near the threshold, so check the
+        # margin region — and overall disagreement must still be bounded.
+        from repro.core import hoyer as _hoyer
+        u = p2m.hardware_conv(x, params["w"], CFG)
+        theta = _hoyer.effective_threshold(u, params["v_th"]) * params["v_th"]
+        # asymmetric confidence bands (Fig. 2b): switching is confident above
+        # V_SW (+50 mV ~ +0.3 units), NOT-switching only below 0.7 V
+        # (-100 mV ~ -0.65 units) — exactly the paper's 0.7/0.8 V operating gap
+        margin = ((u - theta) > 0.3) | ((theta - u) > 0.65)
+        agree = jnp.where(margin, (o_det == o_hw), True)
+        assert float(jnp.mean(agree.astype(jnp.float32))) > 0.999
+        assert float(jnp.mean(jnp.abs(o_det - o_hw))) < 0.35
+
+    def test_noise_injection_flips_bits(self):
+        cfg = p2m.P2MConfig(noise_p_fail=0.5, noise_p_false=0.5)
+        params = _params()
+        x = jax.random.uniform(jax.random.PRNGKey(6), (2, 16, 16, 3))
+        o_clean, _ = p2m.forward_train(params, x, cfg)
+        o_noisy, _ = p2m.forward_train(params, x, cfg, key=jax.random.PRNGKey(7))
+        assert float(jnp.mean(jnp.abs(o_clean - o_noisy))) > 0.1
+
+    def test_sparsity_measure(self):
+        o = jnp.zeros((10, 10)).at[0, :5].set(1.0)
+        np.testing.assert_allclose(float(p2m.output_sparsity(o)), 0.95)
+
+    def test_batchnorm_fusion(self):
+        w = jax.random.normal(jax.random.PRNGKey(8), (3, 3, 3, 4))
+        gamma, beta = jnp.asarray([2.0] * 4), jnp.asarray([0.5] * 4)
+        mean, var = jnp.asarray([0.1] * 4), jnp.asarray([1.0] * 4)
+        wf, shift = p2m.fuse_batchnorm(w, gamma, beta, mean, var)
+        x = jax.random.uniform(jax.random.PRNGKey(9), (1, 8, 8, 3))
+        conv = p2m._phase_conv(x, w, 2)
+        bn = gamma * (conv - mean) / jnp.sqrt(var + 1e-5) + beta
+        fused = p2m._phase_conv(x, wf, 2) + shift
+        np.testing.assert_allclose(np.asarray(bn), np.asarray(fused), atol=1e-4)
+
+
+class TestEnergyBandwidth:
+    def test_bandwidth_reduction_is_6x(self):
+        """§3.2: C = 6 for VGG16/ImageNet."""
+        np.testing.assert_allclose(energy.bandwidth_reduction(), 6.0, rtol=1e-9)
+
+    def test_frontend_improvement_matches_fig9(self):
+        rep = energy.energy_report()
+        assert 7.5 <= rep["frontend_improvement_vs_baseline"] <= 9.0
+        assert 7.3 <= rep["frontend_improvement_vs_insensor"] <= 8.7
+
+    def test_comm_improvement_matches_fig9(self):
+        rep = energy.energy_report()
+        assert 8.0 <= rep["comm_improvement"] <= 9.0
+
+    def test_latency_below_70us(self):
+        """§3.4: full frame (two integrations + burst read) < 70 us."""
+        lat = energy.frame_latency_us()
+        assert lat["total_us"] < 70.0
+        assert lat["fps"] > 1e4
+
+    def test_sparsity_improves_bandwidth_beyond_6x(self):
+        c = energy.effective_bandwidth_with_sparsity(
+            energy.VGG16_IMAGENET, sparsity=0.95, csr_index_bits=18)
+        assert c > 6.0
+
+    def test_ours_energy_strictly_smallest(self):
+        rep = energy.energy_report()
+        fe = rep["frontend_pj"]
+        assert fe["ours"] < fe["in_sensor"] and fe["ours"] < fe["baseline"]

@@ -1,0 +1,115 @@
+"""Circuit + Hoyer activation tests (paper §2.2.2, §2.3, Fig. 4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hoyer, pixel
+
+
+class TestCircuitCurve:
+    def test_near_linear_mid_range(self):
+        """Fig. 4a: output closely tracks the ideal convolution mid-range."""
+        x = jnp.linspace(-1.0, 1.0, 41)
+        g = pixel.circuit_curve(x)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(x), atol=0.06)
+
+    def test_compressive_at_extremes(self):
+        assert float(pixel.circuit_curve(jnp.asarray(3.0))) < 3.0
+        assert float(pixel.circuit_curve(jnp.asarray(-3.0))) > -3.0
+
+    @given(st.floats(-3.0, 3.0), st.floats(-3.0, 3.0))
+    @settings(max_examples=50, deadline=None)
+    def test_monotone(self, a, b):
+        lo, hi = sorted([a, b])
+        assert float(pixel.circuit_curve(jnp.asarray(hi))) >= float(
+            pixel.circuit_curve(jnp.asarray(lo))) - 1e-9
+
+
+class TestThresholdMatching:
+    def test_identity_conv_geq_theta_iff_v_geq_vsw(self):
+        """The key co-design identity (§2.2.2): conv >= theta <=> V >= V_SW."""
+        p = pixel.DEFAULT_PIXEL
+        conv = jnp.linspace(-2.5, 2.5, 101)
+        for theta in [-0.5, 0.0, 0.4, 1.0]:
+            v = pixel.conv_voltage(conv, jnp.asarray(theta), p)
+            alg = conv >= theta
+            hw = v >= p.v_sw
+            # exclude exact-boundary points (float round-off at V == V_SW)
+            away = np.abs(np.asarray(conv) - theta) > 1e-6
+            np.testing.assert_array_equal(np.asarray(alg)[away],
+                                          np.asarray(hw)[away])
+
+    def test_offset_formula(self):
+        p = pixel.DEFAULT_PIXEL
+        v_th = jnp.asarray(0.6)
+        np.testing.assert_allclose(
+            float(pixel.threshold_matching_offset(v_th, p)),
+            0.5 * p.vdd + p.v_sw - 0.6, rtol=1e-6)
+
+    def test_offset_skewed_toward_vdd(self):
+        """Paper: V_SW > V_TH typically, so the DC offset skews toward VDD."""
+        p = pixel.DEFAULT_PIXEL
+        v_th = pixel.algorithmic_threshold_to_volts(jnp.asarray(0.3), p)
+        assert float(pixel.threshold_matching_offset(v_th, p)) > 0.5 * p.vdd
+
+
+class TestTwoPhaseMac:
+    def test_matches_ideal_for_small_inputs(self):
+        key = jax.random.PRNGKey(0)
+        x = jax.random.uniform(key, (5, 27)) * 0.1
+        w = jax.random.normal(jax.random.PRNGKey(1), (27,)) * 0.1
+        out = pixel.two_phase_mac(x, w)
+        ideal = x @ w
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ideal), atol=1e-3)
+
+    def test_signed_decomposition_exact_with_ideal_curve(self):
+        p = pixel.PixelCircuitParams(curve="ideal")
+        x = jnp.asarray([[1.0, 2.0, 0.5]])
+        w = jnp.asarray([0.5, -1.0, 2.0])
+        out = pixel.two_phase_mac(x, w, p)
+        np.testing.assert_allclose(float(out[0]), 0.5 - 2.0 + 1.0, rtol=1e-6)
+
+
+class TestHoyer:
+    def test_extremum_between_mean_and_max(self):
+        z = jnp.asarray([0.1, 0.2, 0.9, 0.0, 0.5])
+        e = float(hoyer.hoyer_extremum(z))
+        assert float(jnp.mean(z)) <= e <= float(jnp.max(z)) + 1e-6
+
+    def test_spike_binary_output(self):
+        u = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 8, 32))
+        o, hl = hoyer.hoyer_spike(u, jnp.asarray(1.0))
+        vals = np.unique(np.asarray(o))
+        assert set(vals.tolist()) <= {0.0, 1.0}
+        assert float(hl) > 0
+
+    def test_effective_threshold_leq_one(self):
+        """Paper: E(z_clip) <= 1, so the actual threshold <= v_th."""
+        u = jax.random.normal(jax.random.PRNGKey(1), (1024,))
+        thr = float(hoyer.effective_threshold(u, jnp.asarray(1.0)))
+        assert 0.0 <= thr <= 1.0
+
+    def test_ste_gradient_flows(self):
+        def loss(u):
+            o, _ = hoyer.hoyer_spike(u, jnp.asarray(1.0))
+            return jnp.sum(o * jnp.arange(u.size, dtype=u.dtype))
+        g = jax.grad(loss)(jnp.linspace(-0.5, 1.5, 16))
+        # gradient nonzero inside the [0, v_th] window, zero outside
+        assert float(jnp.sum(jnp.abs(g))) > 0
+        assert float(g[0]) == 0.0 and float(g[-1]) == 0.0
+
+    @given(st.integers(1, 6))
+    @settings(max_examples=10, deadline=None)
+    def test_hoyer_regularizer_bounds(self, seed):
+        """1 <= H(z) <= #nonzeros (sparsity measure property)."""
+        z = jnp.abs(jax.random.normal(jax.random.PRNGKey(seed), (64,)))
+        h = float(hoyer.hoyer_regularizer(z))
+        assert 1.0 - 1e-4 <= h <= 64.0 + 1e-4
+
+    def test_hoyer_regularizer_prefers_sparse(self):
+        dense = jnp.ones((64,))
+        sparse = jnp.zeros((64,)).at[0].set(1.0)
+        assert float(hoyer.hoyer_regularizer(sparse)) < float(
+            hoyer.hoyer_regularizer(dense))

@@ -1,0 +1,275 @@
+"""Substrate tests: optimizer, gradient compression, data pipeline,
+checkpoint/restart (incl. crash-mid-write), fault-tolerant train loop,
+serving engine."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ArchConfig, OptimizerConfig, RunConfig
+from repro.configs.reduced import reduced
+from repro.data import TokenStream
+from repro.models import lm
+from repro.optim import compression
+from repro.optim.optimizer import (apply_updates, init_opt_state,
+                                   lr_schedule, global_norm)
+from repro.serving import ServingEngine
+from repro.train import Trainer, make_train_step
+
+TINY = ArchConfig(name="tiny", family="dense", num_layers=2, d_model=32,
+                  num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=128,
+                  param_dtype="float32", compute_dtype="float32",
+                  remat="none", q_chunk=16, kv_chunk=16)
+
+
+class TestOptimizer:
+    def _quad(self, cfg):
+        params = {"w": jnp.asarray([3.0, -2.0]), "m": jnp.ones((4, 6))}
+        state = init_opt_state(params, cfg)
+        for _ in range(200):
+            grads = jax.tree.map(lambda p: 2 * p, params)   # d/dp ||p||^2
+            params, state, m = apply_updates(params, grads, state, cfg)
+        return params
+
+    def test_adamw_converges_on_quadratic(self):
+        cfg = OptimizerConfig(lr=0.05, warmup_steps=0, total_steps=200,
+                              weight_decay=0.0)
+        params = self._quad(cfg)
+        assert float(global_norm(params)) < 0.2
+
+    def test_factored_second_moment_converges(self):
+        cfg = OptimizerConfig(lr=0.05, warmup_steps=0, total_steps=200,
+                              weight_decay=0.0, factored_second_moment=True)
+        params = self._quad(cfg)
+        assert float(global_norm(params)) < 0.3
+
+    def test_factored_state_is_smaller(self):
+        p = {"w": jnp.zeros((64, 128))}
+        full = init_opt_state(p, OptimizerConfig())
+        fact = init_opt_state(p, OptimizerConfig(factored_second_moment=True))
+        nbytes = lambda t: sum(x.size * x.dtype.itemsize
+                               for x in jax.tree.leaves(t))
+        assert nbytes(fact.nu) < nbytes(full.nu) / 20
+
+    def test_bf16_momentum(self):
+        p = {"w": jnp.zeros((8, 8))}
+        st_ = init_opt_state(p, OptimizerConfig(momentum_dtype="bfloat16"))
+        assert jax.tree.leaves(st_.mu)[0].dtype == jnp.bfloat16
+
+    def test_grad_clip(self):
+        cfg = OptimizerConfig(lr=1.0, warmup_steps=0, grad_clip=1.0)
+        p = {"w": jnp.zeros((4,))}
+        s = init_opt_state(p, cfg)
+        big = {"w": jnp.full((4,), 1e6)}
+        newp, _, m = apply_updates(p, big, s, cfg)
+        assert float(m["grad_norm"]) > 1e5
+        assert bool(jnp.all(jnp.isfinite(newp["w"])))
+
+    def test_lr_schedule_shape(self):
+        cfg = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+        lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in
+               [0, 5, 10, 50, 100]]
+        assert lrs[0] == 0.0 and lrs[1] == pytest.approx(5e-4)
+        assert lrs[2] == pytest.approx(1e-3)
+        assert lrs[4] == pytest.approx(1e-4, rel=0.05)
+
+
+class TestCompression:
+    @given(seed=st.integers(0, 20))
+    @settings(max_examples=10, deadline=None)
+    def test_roundtrip_error_bounded(self, seed):
+        g = jax.random.normal(jax.random.PRNGKey(seed), (256,))
+        q, s, res = compression.compress_int8(g, jnp.zeros_like(g))
+        back = compression.decompress_int8(q, s)
+        assert float(jnp.max(jnp.abs(back - g))) <= float(s) * 0.5 + 1e-6
+
+    def test_error_feedback_is_unbiased_over_time(self):
+        """Sum of decompressed grads + final residual == sum of true grads."""
+        key = jax.random.PRNGKey(0)
+        res = jnp.zeros((64,))
+        total_true = jnp.zeros((64,))
+        total_sent = jnp.zeros((64,))
+        for i in range(50):
+            g = jax.random.normal(jax.random.fold_in(key, i), (64,))
+            q, s, res = compression.compress_int8(g, res)
+            total_true += g
+            total_sent += compression.decompress_int8(q, s)
+        np.testing.assert_allclose(np.asarray(total_sent + res),
+                                   np.asarray(total_true), atol=1e-3)
+
+    def test_bytes_halved(self):
+        p = {"w": jnp.zeros((1000,), jnp.bfloat16)}
+        bf16, int8 = compression.compressed_psum_bytes(p)
+        assert int8 * 2 == bf16
+
+
+class TestData:
+    def test_deterministic_and_resumable(self):
+        s1 = TokenStream(vocab_size=100, seq_len=16, global_batch=4)
+        b1 = [s1.next_batch()["tokens"] for _ in range(3)]
+        s2 = TokenStream(vocab_size=100, seq_len=16, global_batch=4)
+        s2.load_state_dict({"step": 2, "seed": 0})
+        np.testing.assert_array_equal(np.asarray(s2.next_batch()["tokens"]),
+                                      np.asarray(b1[2]))
+
+    def test_shards_differ(self):
+        a = TokenStream(100, 16, 8, shard=0, num_shards=2)
+        b = TokenStream(100, 16, 8, shard=1, num_shards=2)
+        assert not np.array_equal(np.asarray(a.next_batch()["tokens"]),
+                                  np.asarray(b.next_batch()["tokens"]))
+
+    def test_learnable_structure(self):
+        """Bigram structure must make a unigram model beat chance."""
+        s = TokenStream(vocab_size=50, seq_len=128, global_batch=8)
+        b = s.next_batch()
+        toks = np.asarray(b["tokens"])
+        succ = (toks.astype(np.int64) * 48271 + 12345) % 50
+        nxt = np.asarray(b["labels"])
+        agree = float(np.mean(nxt[:, :-1] == succ[:, :-1]))
+        assert agree > 0.1   # way above the 2% chance rate: learnable bigrams
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+        tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+                "b": {"c": jnp.ones((4,), jnp.bfloat16)},
+                "t": (jnp.zeros(()), ())}
+        mgr.save(10, {"state": tree}, extra={"pipeline": {"step": 7}})
+        out, extra = mgr.restore(10, {"state": tree})
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out["state"])):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert extra["pipeline"]["step"] == 7
+
+    def test_keep_k_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+        t = {"a": jnp.zeros((2,))}
+        for s in (1, 2, 3, 4):
+            mgr.save(s, {"state": t})
+        assert mgr.all_steps() == [3, 4]
+
+    def test_crash_mid_write_ignored(self, tmp_path):
+        """A stale .tmp dir (crashed writer) must not break restore."""
+        mgr = CheckpointManager(str(tmp_path), keep=3, async_write=False)
+        t = {"a": jnp.ones((2,))}
+        mgr.save(1, {"state": t})
+        os.makedirs(tmp_path / "step_2.tmp")       # simulated crash
+        os.makedirs(tmp_path / "step_3")           # no manifest -> corrupt
+        assert mgr.latest_step() == 1
+
+    def test_dtype_cast_on_restore(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_write=False)
+        mgr.save(1, {"state": {"w": jnp.ones((3,), jnp.float32)}})
+        out, _ = mgr.restore(1, {"state": {"w": jnp.zeros((3,), jnp.bfloat16)}})
+        assert out["state"]["w"].dtype == jnp.bfloat16
+
+
+def _run_cfg(tmp, **kw):
+    return RunConfig(
+        arch=TINY,
+        optimizer=OptimizerConfig(lr=1e-2, warmup_steps=5, total_steps=60),
+        checkpoint_dir=str(tmp), checkpoint_every=10, log_every=5, **kw)
+
+
+class TestTrainLoop:
+    def test_loss_decreases(self, tmp_path):
+        run = _run_cfg(tmp_path)
+        stream = TokenStream(TINY.vocab_size, 32, 8)
+        tr = Trainer(run, stream)
+        params, opt, step = tr.restore_or_init(
+            lambda: lm.init_params(jax.random.PRNGKey(0), TINY))
+        params, opt, step = tr.fit(params, opt, step, 40)
+        assert step == 40
+        assert tr.history[-1]["loss"] < tr.history[0]["loss"]
+
+    def test_restart_resumes_exactly(self, tmp_path):
+        run = _run_cfg(tmp_path)
+        stream = TokenStream(TINY.vocab_size, 32, 8)
+        tr = Trainer(run, stream)
+        p0 = lambda: lm.init_params(jax.random.PRNGKey(0), TINY)
+        params, opt, step = tr.restore_or_init(p0)
+        params, opt, step = tr.fit(params, opt, step, 20)
+        # simulate preemption + restart from checkpoint
+        stream2 = TokenStream(TINY.vocab_size, 32, 8)
+        tr2 = Trainer(run, stream2)
+        params2, opt2, step2 = tr2.restore_or_init(p0)
+        assert step2 == 20
+        assert stream2.step == stream.step
+        np.testing.assert_allclose(
+            np.asarray(jax.tree.leaves(params)[0]),
+            np.asarray(jax.tree.leaves(params2)[0]), rtol=1e-6)
+
+    def test_nan_guard_skips_update(self):
+        step = make_train_step(TINY, OptimizerConfig(lr=1e-2))
+        params = lm.init_params(jax.random.PRNGKey(0), TINY)
+        opt = init_opt_state(params, OptimizerConfig())
+        bad = {"tokens": jnp.zeros((2, 16), jnp.int32),
+               "labels": jnp.zeros((2, 16), jnp.int32)}
+
+        def nan_loss(p, b):
+            return jnp.float32(jnp.nan), {"loss": jnp.float32(jnp.nan)}
+
+        step_nan = make_train_step(TINY, OptimizerConfig(lr=1e-2),
+                                   loss_fn=nan_loss)
+        newp, newo, m = step_nan(params, opt, bad)
+        assert int(m["skipped"]) == 1
+        np.testing.assert_array_equal(
+            np.asarray(jax.tree.leaves(newp)[0]),
+            np.asarray(jax.tree.leaves(params)[0]))
+
+    def test_microbatch_accumulation_matches_full_batch(self):
+        params = lm.init_params(jax.random.PRNGKey(0), TINY)
+        opt1 = init_opt_state(params, OptimizerConfig(lr=1e-2))
+        opt2 = init_opt_state(params, OptimizerConfig(lr=1e-2))
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                              (8, 32), 0, TINY.vocab_size)}
+        batch["labels"] = jnp.roll(batch["tokens"], -1, 1)
+        s1 = make_train_step(TINY, OptimizerConfig(lr=1e-2), microbatches=1)
+        s4 = make_train_step(TINY, OptimizerConfig(lr=1e-2), microbatches=4)
+        p1, _, m1 = s1(params, opt1, batch)
+        p4, _, m4 = s4(params, opt2, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(jax.tree.leaves(p1)[0]),
+            np.asarray(jax.tree.leaves(p4)[0]), atol=2e-5)
+
+    def test_preemption_stop_checkpoints(self, tmp_path):
+        run = _run_cfg(tmp_path)
+        stream = TokenStream(TINY.vocab_size, 32, 8)
+        tr = Trainer(run, stream)
+        params, opt, step = tr.restore_or_init(
+            lambda: lm.init_params(jax.random.PRNGKey(0), TINY))
+        tr.request_stop()
+        params, opt, step = tr.fit(params, opt, 0, 40)
+        assert step == 0 or tr.ckpt.latest_step() is not None
+
+
+class TestServing:
+    def test_generate_greedy(self):
+        params = lm.init_params(jax.random.PRNGKey(0), TINY)
+        eng = ServingEngine(TINY, params, max_len=64)
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                     TINY.vocab_size)
+        out = eng.generate(prompts, max_new_tokens=5)
+        assert out.shape == (2, 5)
+        assert out.dtype == jnp.int32
+        assert int(jnp.max(out)) < TINY.vocab_size
+
+    def test_decode_consistent_with_teacher_forcing(self):
+        """Greedy decode logits == full-forward logits on the same prefix."""
+        params = lm.init_params(jax.random.PRNGKey(0), TINY)
+        eng = ServingEngine(TINY, params, max_len=32)
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                     TINY.vocab_size)
+        gen = eng.generate(prompts, max_new_tokens=3)
+        # teacher-forced check of the first generated token
+        logits, _ = lm.forward(params, prompts, TINY)
+        np.testing.assert_array_equal(
+            np.asarray(jnp.argmax(logits[:, -1], -1)), np.asarray(gen[:, 0]))
