@@ -16,11 +16,48 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import frontend
 from repro.core import energy, mtj, p2m
 from repro.data import ImageStream
 from repro.models import vision
 
 Row = Tuple[str, float, str]
+
+
+# ---------------------------------------------------------------------------
+# SensorFrontend — per-backend wall time + cross-backend agreement
+# ---------------------------------------------------------------------------
+
+def bench_frontend_backends() -> List[Row]:
+    """All four backends behind the one SensorFrontend signature."""
+    fe = frontend.SensorFrontend()
+    params = fe.init(jax.random.PRNGKey(0))
+    frame = jax.random.uniform(jax.random.PRNGKey(1), (4, 32, 32, 3))
+    key = jax.random.PRNGKey(2)
+    rows: List[Row] = []
+    outs = {}
+    for mode in frontend.list_backends():
+        # jit the whole frontend call so every backend is timed compiled
+        # (mode is static via the closure) — otherwise the pure-JAX
+        # backends would pay eager dispatch while pallas runs jitted
+        step = jax.jit(lambda p, x, k, m=mode: fe(p, x, key=k, mode=m))
+        for _ in range(2):         # compile + absorb first-dispatch effects
+            warm, _ = step(params, frame, key)
+            jax.block_until_ready(warm)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            acts, aux = step(params, frame, key)
+            jax.block_until_ready(acts)
+        outs[mode] = acts
+        rows.append((f"frontend/{mode}_us",
+                     (time.perf_counter() - t0) / 3 * 1e6, "per-frame-batch"))
+        rows.append((f"frontend/{mode}_sparsity",
+                     float(aux["sparsity"]) * 100, "sparsity_%"))
+    for a, b in (("analog", "device"), ("device", "pallas")):
+        agree = float(jnp.mean((outs[a] == outs[b]).astype(jnp.float32)))
+        rows.append((f"frontend/agree_{a}_vs_{b}", agree * 100,
+                     "bit-agreement_%"))
+    return rows
 
 
 # ---------------------------------------------------------------------------

@@ -12,6 +12,7 @@ import time
 def main() -> None:
     from benchmarks import paper_benchmarks as pb
     benches = [
+        pb.bench_frontend_backends,
         pb.bench_fig5_multi_mtj,
         pb.bench_fig9_energy,
         pb.bench_eq3_bandwidth,

@@ -10,7 +10,7 @@ backbone's vocabulary — an ADC-less, 1-bit-link camera feeding an LLM.
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import configs, frontend
 from repro.configs.reduced import reduced
 from repro.core import energy, p2m
 from repro.models import lm
@@ -36,13 +36,15 @@ def main() -> None:
     cfg = reduced(configs.get_arch("chameleon-34b"))
     print("backbone:", cfg.name, "(reduced)")
 
-    # the camera: P2M front-end on a synthetic frame
-    pcfg = p2m.P2MConfig(out_channels=32)
-    pparams = p2m.init_params(jax.random.PRNGKey(0), pcfg)
+    # the camera: SensorFrontend (Monte-Carlo device backend) on a frame
+    fe = frontend.SensorFrontend(frontend.FrontendConfig(
+        p2m=p2m.P2MConfig(out_channels=32), backend="device"))
+    pparams = fe.init(jax.random.PRNGKey(0))
     frame = jax.random.uniform(jax.random.PRNGKey(1), (2, 32, 32, 3))
-    spikes = p2m.forward_hardware(pparams, frame, pcfg, jax.random.PRNGKey(2))
+    spikes, aux = fe(pparams, frame, key=jax.random.PRNGKey(2))
     print(f"spikes: {spikes.shape}, sparsity "
-          f"{float(p2m.output_sparsity(spikes)) * 100:.1f}%")
+          f"{float(aux['sparsity']) * 100:.1f}%, "
+          f"V_CONV mean {float(aux['v_conv_mean']):.3f} V")
 
     tokens = spikes_to_tokens(spikes, cfg.vocab_size)
     print(f"image tokens: {tokens.shape} in [{int(tokens.min())}, "

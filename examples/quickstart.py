@@ -5,15 +5,16 @@
 Walks the full device-circuit-algorithm co-design story:
   1. VC-MTJ device model (switching probabilities at the measured points),
   2. multi-MTJ majority redundancy (Fig. 5),
-  3. the in-pixel conv layer: training path vs hardware path,
-  4. the fused Pallas kernel (interpret mode),
+  3. the SensorFrontend: ONE API, four backends over the in-pixel layer
+     (ideal / analog / device / pallas — see DESIGN.md §2),
+  4. the global-shutter stage (burst read + reset accounting),
   5. bandwidth / energy / latency wins (Eq. 3, Fig. 9, §3.4).
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import energy, mtj, p2m
-from repro.kernels import ops
+from repro import frontend
+from repro.core import energy, mtj
 
 print("=" * 70)
 print("1. VC-MTJ device model (measured: 6.2% @0.7V, 92.4% @0.8V, 97.17% @0.9V)")
@@ -26,26 +27,28 @@ fail, false = mtj.majority_error_rates(0.924, 0.062, n=8, majority=4)
 print(f"   fail-to-activate: {float(fail) * 100:.4f}%   "
       f"false-activate: {float(false) * 100:.4f}%   (paper: both < 0.1%)")
 
-print("\n3. P2M in-pixel first layer (32x32 Bayer-ish frame, 32 channels)")
-cfg = p2m.P2MConfig()
-params = p2m.init_params(jax.random.PRNGKey(0), cfg)
+print("\n3. SensorFrontend: one API, four backends "
+      f"{frontend.list_backends()}")
+fe = frontend.SensorFrontend()         # default: analog training backend
+params = fe.init(jax.random.PRNGKey(0))
 frame = jax.random.uniform(jax.random.PRNGKey(1), (1, 32, 32, 3))
-o_train, hoyer_loss = p2m.forward_train(params, frame, cfg)
-o_hw = p2m.forward_hardware(params, frame, cfg, jax.random.PRNGKey(2))
-agree = float(jnp.mean((o_train == o_hw).astype(jnp.float32)))
-print(f"   train-mode output {o_train.shape}, "
-      f"sparsity {float(p2m.output_sparsity(o_train)) * 100:.1f}%")
-print(f"   hardware-mode (stochastic MTJs) agreement with ideal: "
-      f"{agree * 100:.1f}%")
+outs = {}
+for mode in frontend.list_backends():
+    acts, aux = fe(params, frame, key=jax.random.PRNGKey(2), mode=mode)
+    outs[mode] = (acts, aux)
+    print(f"   {mode:7s} {acts.shape}  sparsity "
+          f"{float(aux['sparsity']) * 100:5.1f}%  "
+          f"V_CONV mean {float(aux['v_conv_mean']):.3f} V")
+agree = float(jnp.mean((outs["analog"][0] == outs["device"][0])
+                       .astype(jnp.float32)))
+print(f"   device (stochastic MTJs) agreement with analog: {agree * 100:.1f}%")
 
-print("\n4. fused Pallas kernel (interpret mode on CPU; MXU-tiled on TPU)")
-from repro.core import hoyer
-u = p2m.hardware_conv(frame, params["w"], cfg)
-theta = hoyer.effective_threshold(u, params["v_th"]) * params["v_th"]
-o_kernel = ops.p2m_conv(frame, p2m.quantize_weights(params["w"], 4), theta,
-                        jax.random.PRNGKey(3), block_n=128)
-print(f"   kernel output {o_kernel.shape}, "
-      f"activation rate {float(jnp.mean(o_kernel)) * 100:.1f}%")
+print("\n4. global shutter  [Fig. 6: non-volatile MTJ storage + burst read]")
+_, aux = outs["device"]
+print(f"   activated fraction: {float(aux['activated_fraction']) * 100:.1f}%  "
+      f"reset pulses: {int(aux['reset_pulses'])}")
+print(f"   read energy: {float(aux['read_energy_pj']) / 1e3:.1f} nJ   "
+      f"reset energy: {float(aux['reset_energy_pj']):.2f} pJ")
 
 print("\n5. system wins  [Eq. 3 / Fig. 9 / §3.4]")
 rep = energy.energy_report()

@@ -5,15 +5,16 @@ layer + Hoyer binary activations) for a few hundred steps on synthetic data.
 
 Reports accuracy (vs 10% chance), P2M output sparsity (paper: 72-84%), and
 the accuracy retained under hardware (stochastic 8-MTJ majority) evaluation.
+Uses the shared loops in repro.train.vision — the same code the production
+launcher (repro.launch.train) runs.
 """
 import argparse
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.data import ImageStream
 from repro.models import vision
+from repro.train import vision as vision_loop
 
 
 def main() -> None:
@@ -26,36 +27,20 @@ def main() -> None:
     cfg = vision.VisionConfig(name="demo", arch=args.arch, num_classes=10)
     params = vision.init_params(jax.random.PRNGKey(0), cfg)
     stream = ImageStream(hw=32, num_classes=10, global_batch=64)
-    lr = 3e-3
-
-    @jax.jit
-    def step(p, batch):
-        def loss(p_):
-            return vision.loss_fn(p_, batch, cfg)
-        (l, aux), g = jax.value_and_grad(loss, has_aux=True)(p)
-        return jax.tree.map(lambda w, gw: w - lr * gw, p, g), l, aux
-
-    for i in range(args.steps):
-        params, l, aux = step(params, stream.next_batch())
-        if (i + 1) % max(args.steps // 10, 1) == 0:
-            print(f"step {i + 1:4d}  loss {float(l):.4f}  "
-                  f"acc {float(aux['acc']) * 100:5.1f}%  "
-                  f"p2m sparsity {float(aux['p2m_sparsity']) * 100:5.1f}%")
+    params = vision_loop.fit(params, cfg, stream, args.steps, lr=3e-3,
+                             key=jax.random.PRNGKey(42),
+                             log_every=max(args.steps // 10, 1))
 
     # hardware-mode evaluation: stochastic VC-MTJ switching + majority vote
     ev = ImageStream(hw=32, num_classes=10, global_batch=64, seed=99)
-    ideal, hw, n = 0.0, 0.0, 0
-    for j in range(4):
-        b = ev.next_batch()
-        li, _, _ = vision.forward(params, b["image"], cfg)
-        lh, _, _ = vision.forward(params, b["image"], cfg, mode="hardware",
-                                  key=jax.random.PRNGKey(j))
-        ideal += float(jnp.sum(jnp.argmax(li, -1) == b["label"]))
-        hw += float(jnp.sum(jnp.argmax(lh, -1) == b["label"]))
-        n += b["label"].shape[0]
-    print(f"\neval: ideal {ideal / n * 100:.1f}%  "
-          f"hardware(8-MTJ majority) {hw / n * 100:.1f}%  "
-          f"(paper: no significant drop)")
+    acc_ideal, n = vision_loop.evaluate(params, cfg, ev, n_batches=4)
+    ev = ImageStream(hw=32, num_classes=10, global_batch=64, seed=99)
+    acc_hw, _ = vision_loop.evaluate(params, cfg, ev, n_batches=4,
+                                     backend="device",
+                                     key=jax.random.PRNGKey(7))
+    print(f"\neval ({n} examples): {cfg.frontend_backend} "
+          f"{acc_ideal * 100:.1f}%  hardware(8-MTJ majority) "
+          f"{acc_hw * 100:.1f}%  (paper: no significant drop)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Minimal CI: the tier-1 verify command (see ROADMAP.md).
+# Usage: scripts/ci.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Tuple
 
 import jax
@@ -36,15 +37,15 @@ def _logit(p: float) -> float:
     return float(np.log(p / (1.0 - p)))
 
 
-_LOGITS = tuple(_logit(p) for p in MEASURED_P_SW)
-# end-extension slopes (logits / volt) so the fit stays monotone
-_SLOPE_LO = (_LOGITS[1] - _LOGITS[0]) / (MEASURED_VOLTAGES[1] - MEASURED_VOLTAGES[0])
-_SLOPE_HI = (_LOGITS[2] - _LOGITS[1]) / (MEASURED_VOLTAGES[2] - MEASURED_VOLTAGES[1])
-
-
 @dataclasses.dataclass(frozen=True)
 class MTJParams:
-    """Device parameters for the fabricated VC-MTJ stack."""
+    """Device parameters for the fabricated VC-MTJ stack.
+
+    The measured switching points live here (not as free-floating module
+    constants) so that every consumer — the core device model, the pure-jnp
+    kernel oracle, and the fused Pallas kernel — derives the logit fit from
+    one source (DESIGN.md §3).
+    """
     r_p: float = 4.0e3            # ohms, parallel state
     tmr: float = 1.55             # (R_AP - R_P)/R_P > 150% near zero bias
     diameter_nm: float = 70.0
@@ -55,6 +56,8 @@ class MTJParams:
     reset_precession_period_ps: float = 1000.0  # reset envelope peak @ 500 ps
     read_voltage: float = 0.1     # |V| well below disturb threshold
     n_redundant: int = 8          # MTJs per kernel (paper uses 8)
+    measured_voltages: Tuple[float, ...] = MEASURED_VOLTAGES
+    measured_p_sw: Tuple[float, ...] = MEASURED_P_SW
 
     @property
     def r_ap(self) -> float:
@@ -65,19 +68,32 @@ class MTJParams:
         """Votes needed to activate — majority of n_redundant."""
         return self.n_redundant // 2
 
+    @property
+    def measured_logits(self) -> Tuple[float, ...]:
+        return tuple(_logit(p) for p in self.measured_p_sw)
+
 
 DEFAULT_MTJ = MTJParams()
 
 
-def switching_logit(voltage: jax.Array) -> jax.Array:
-    """Monotone logit(P_sw) vs applied voltage, 700 ps pulse, AP->P."""
+def switching_logit(voltage: jax.Array,
+                    params: MTJParams = DEFAULT_MTJ) -> jax.Array:
+    """Monotone logit(P_sw) vs applied voltage, 700 ps pulse, AP->P.
+
+    Piecewise-linear in logit space through the three measured points, with
+    end-segment extrapolation. Written in closed form (where/arithmetic only,
+    no gather) so the exact same function traces inside the Pallas kernel.
+    """
     v = jnp.asarray(voltage)
-    vols = jnp.asarray(MEASURED_VOLTAGES)
-    logits = jnp.asarray(_LOGITS)
-    mid = jnp.interp(v, vols, logits)
-    lo = logits[0] + _SLOPE_LO * (v - vols[0])
-    hi = logits[2] + _SLOPE_HI * (v - vols[2])
-    return jnp.where(v < vols[0], lo, jnp.where(v > vols[2], hi, mid))
+    (v0, v1, v2) = params.measured_voltages
+    (l0, l1, l2) = params.measured_logits
+    slope_lo = (l1 - l0) / (v1 - v0)
+    slope_hi = (l2 - l1) / (v2 - v1)
+    # the low line covers v < v1 (including the extrapolation below v0);
+    # the high line covers v >= v1 (including the extrapolation above v2)
+    lo = l0 + slope_lo * (v - v0)
+    hi = l1 + slope_hi * (v - v1)
+    return jnp.where(v < v1, lo, hi)
 
 
 def pulse_envelope(pulse_ps: jax.Array, period_ps: float) -> jax.Array:
@@ -94,7 +110,7 @@ def switching_probability(
 
     Exactly reproduces the three measured points at 700 ps.
     """
-    p_v = jax.nn.sigmoid(switching_logit(voltage))
+    p_v = jax.nn.sigmoid(switching_logit(voltage, params))
     env = pulse_envelope(pulse_ps, params.precession_period_ps)
     # normalise so the envelope is 1 at the nominal write pulse
     env_ref = pulse_envelope(params.write_pulse_ps, params.precession_period_ps)
@@ -103,7 +119,7 @@ def switching_probability(
 
 def reset_probability(params: MTJParams = DEFAULT_MTJ) -> jax.Array:
     """P(P->AP reset) at the nominal 0.9 V / 500 ps reset pulse."""
-    p_v = jax.nn.sigmoid(switching_logit(jnp.asarray(params.reset_voltage)))
+    p_v = jax.nn.sigmoid(switching_logit(jnp.asarray(params.reset_voltage), params))
     return p_v  # envelope is at its peak for the reset pulse by construction
 
 
@@ -118,6 +134,20 @@ def _binom_pmf(k: jax.Array, n: int, p: jax.Array) -> jax.Array:
     eps = jnp.finfo(jnp.result_type(p, jnp.float32)).eps
     pc = jnp.clip(p, eps, 1.0 - eps)       # avoid 0*inf NaNs at the edges
     return jnp.exp(log_c + k * jnp.log(pc) + (n - k) * jnp.log1p(-pc))
+
+
+def majority_prob_poly(p: jax.Array, n: int = 8, m: int = 4) -> jax.Array:
+    """P(Binomial(n, p) >= m) as an explicit polynomial.
+
+    Algebraically identical to ``majority_activation_probability`` but uses
+    only multiply/add (no gammaln, no log of p near 0/1), so it is safe to
+    trace inside a Pallas kernel and exact at p in {0, 1}. This is the single
+    source for the majority fold used by kernels/{ref,p2m_conv}.py.
+    """
+    out = jnp.zeros_like(p)
+    for k in range(m, n + 1):
+        out = out + math.comb(n, k) * (p ** k) * ((1 - p) ** (n - k))
+    return out
 
 
 def majority_activation_probability(

@@ -1,14 +1,17 @@
-"""P2MConv — the paper's in-pixel first layer as a composable JAX module.
+"""P2M first-layer *physics*: quantization, two-phase analog conv, BN fusion.
 
-Pipeline (paper Fig. 3/7):
+This module is deliberately thin — it holds only the shared physical model of
+the in-pixel layer (paper Fig. 3/7):
 
   4-bit quantized signed weights (transistor widths, VDD+/VDD- rails)
     -> two-phase analog MAC with the circuit curve per phase (Fig. 4a)
-    -> passive subtractor (+ threshold-matching offset)
-    -> VC-MTJ binary activation
-         train:    Hoyer-extremum threshold + straight-through gradient,
-                   optional stochastic-switching noise injection (Fig. 8)
-         hardware: per-device Bernoulli switching x 8 MTJs + majority (Fig. 5)
+    -> passive subtractor (normalized conv output).
+
+Everything downstream of the subtractor — Hoyer/STE training activation,
+Monte-Carlo VC-MTJ switching, the fused Pallas kernel, global-shutter
+readout — lives behind the ``SensorFrontend`` backend API in
+``repro/frontend`` (DESIGN.md §2), so the four views of the layer can never
+drift from this one physics implementation.
 
 BatchNorm folding (paper §2.4.1): the BN scale is folded into the weight
 tensor ("embedding it directly into the pixel values of the weight tensor"),
@@ -17,12 +20,12 @@ the shift into the comparator threshold.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import hoyer, mtj, pixel
+from repro.core import mtj, pixel
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,7 +35,9 @@ class P2MConfig:
     kernel_size: int = 3
     stride: int = 2             # paper §2.4.4: stride 2
     weight_bits: int = 4        # Table 1: 4-bit weights
-    hoyer_coeff: float = 1e-8
+    # NOTE: the Hoyer regularizer coefficient deliberately does NOT live
+    # here — backends return the raw hoyer term in aux and the *consumer*
+    # (e.g. VisionConfig.hoyer_coeff) scales it exactly once.
     pixel: pixel.PixelCircuitParams = pixel.DEFAULT_PIXEL
     mtj: mtj.MTJParams = mtj.DEFAULT_MTJ
     # train-time stochastic-switching noise injection (Fig. 8 study)
@@ -58,12 +63,16 @@ def quantize_weights(w: jax.Array, bits: int) -> jax.Array:
     return w + jax.lax.stop_gradient(wq - w)
 
 
-def _phase_conv(x: jax.Array, w: jax.Array, stride: int) -> jax.Array:
+def phase_conv(x: jax.Array, w: jax.Array, stride: int) -> jax.Array:
     """NHWC conv with HWIO weights (one analog integration phase)."""
     return jax.lax.conv_general_dilated(
         x, w, window_strides=(stride, stride), padding="SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     )
+
+
+# kept under the old private name for existing callers/tests
+_phase_conv = phase_conv
 
 
 def hardware_conv(x: jax.Array, w: jax.Array, cfg: P2MConfig) -> jax.Array:
@@ -74,55 +83,9 @@ def hardware_conv(x: jax.Array, w: jax.Array, cfg: P2MConfig) -> jax.Array:
     passive subtractor forms the difference.
     """
     wq = quantize_weights(w, cfg.weight_bits)
-    mac_pos = _phase_conv(x, jnp.maximum(wq, 0.0), cfg.stride)
-    mac_neg = _phase_conv(x, jnp.maximum(-wq, 0.0), cfg.stride)
+    mac_pos = phase_conv(x, jnp.maximum(wq, 0.0), cfg.stride)
+    mac_neg = phase_conv(x, jnp.maximum(-wq, 0.0), cfg.stride)
     return pixel.hardware_conv_output(mac_pos, mac_neg, cfg.pixel)
-
-
-def forward_train(
-    params: dict, x: jax.Array, cfg: P2MConfig,
-    key: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, jax.Array]:
-    """Training path: Hoyer spike + STE. Returns (binary activations, hoyer loss).
-
-    If cfg.noise_p_fail / noise_p_false are set (Fig. 8 robustness study) and a
-    key is given, activation bits are flipped with those probabilities via a
-    straight-through perturbation.
-    """
-    u = hardware_conv(x, params["w"], cfg)
-    o, hl = hoyer.hoyer_spike(u, params["v_th"])
-    if key is not None and (cfg.noise_p_fail > 0 or cfg.noise_p_false > 0):
-        k1, k2 = jax.random.split(key)
-        fail = jax.random.bernoulli(k1, cfg.noise_p_fail, o.shape)
-        false = jax.random.bernoulli(k2, cfg.noise_p_false, o.shape)
-        noisy = jnp.where(o > 0.5, 1.0 - fail.astype(o.dtype), false.astype(o.dtype))
-        o = o + jax.lax.stop_gradient(noisy - o)   # STE through the flips
-    return o, cfg.hoyer_coeff * hl
-
-
-def forward_hardware(
-    params: dict, x: jax.Array, cfg: P2MConfig, key: jax.Array,
-) -> jax.Array:
-    """Hardware-eval path: full device simulation.
-
-    conv -> threshold-matching voltage -> per-MTJ stochastic switching
-    (switching_probability at the applied V_CONV) x n_redundant -> majority.
-    """
-    u = hardware_conv(x, params["w"], cfg)
-    theta_norm = hoyer.effective_threshold(u, params["v_th"])   # in z units
-    theta = theta_norm * params["v_th"]                          # in u units
-    v_conv = pixel.conv_voltage(u, theta, cfg.pixel)
-    p_sw = mtj.switching_probability(v_conv, cfg.mtj.write_pulse_ps, cfg.mtj)
-    return mtj.sample_majority_activation(
-        key, p_sw, cfg.mtj.n_redundant, cfg.mtj.majority)
-
-
-def forward_ideal(params: dict, x: jax.Array, cfg: P2MConfig) -> jax.Array:
-    """Ideal (no circuit curve, deterministic) reference for ablations."""
-    wq = quantize_weights(params["w"], cfg.weight_bits)
-    u = _phase_conv(x, wq, cfg.stride)
-    o, _ = hoyer.hoyer_spike(u, params["v_th"])
-    return o
 
 
 def fuse_batchnorm(w: jax.Array, gamma: jax.Array, beta: jax.Array,

@@ -22,30 +22,46 @@ import jax
 import jax.numpy as jnp
 
 CurveFn = Callable[[jax.Array], jax.Array]
+# a registry entry is a factory: bind the circuit params, get the curve
+CurveFactory = Callable[["PixelCircuitParams"], CurveFn]
 
-_CURVES: Dict[str, CurveFn] = {}
+_CURVES: Dict[str, CurveFactory] = {}
 
 
 def register_curve(name: str):
-    def deco(fn: CurveFn) -> CurveFn:
+    def deco(fn: CurveFactory) -> CurveFactory:
         _CURVES[name] = fn
         return fn
     return deco
 
 
-def get_curve(name: str) -> CurveFn:
-    return _CURVES[name]
+def get_curve(name: str, p: "PixelCircuitParams" = None) -> CurveFn:
+    """Resolve a registered transfer curve, bound to circuit params.
+
+    The returned closure uses only elementwise jnp ops, so it can be traced
+    inside the fused Pallas kernel as well as the pure-JAX paths (the kernel
+    no longer bakes its own copy of the curve — DESIGN.md §3/§5).
+    """
+    if name not in _CURVES:
+        raise KeyError(f"unknown pixel curve {name!r}; "
+                       f"registered: {sorted(_CURVES)}")
+    return _CURVES[name](p if p is not None else DEFAULT_PIXEL)
 
 
-@register_curve("ideal")
-def _ideal(x: jax.Array) -> jax.Array:
-    return x
-
-
-@register_curve("gf22_tanh")
 def circuit_curve(x: jax.Array, saturation: float = 2.5) -> jax.Array:
     """Compressive pixel/bitline transfer curve over the normalized range."""
     return saturation * jnp.tanh(x / saturation)
+
+
+@register_curve("ideal")
+def _ideal(p: "PixelCircuitParams") -> CurveFn:
+    return lambda x: x
+
+
+@register_curve("gf22_tanh")
+def _gf22_tanh(p: "PixelCircuitParams") -> CurveFn:
+    sat = p.saturation
+    return lambda x: circuit_curve(x, sat)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +71,7 @@ class PixelCircuitParams:
     v_sw: float = 0.8             # VC-MTJ near-deterministic switching voltage
     norm_range: float = 3.0       # algorithmic normalized range [-3, 3] (Fig. 4a)
     curve: str = "gf22_tanh"
+    saturation: float = 2.5       # Fig. 4a compressive knee of the bitline curve
     integration_time_us: float = 5.0
 
     @property
@@ -86,7 +103,7 @@ def two_phase_mac(
     Phase 1 accumulates the negative-weight MAC, phase 2 the positive-weight
     MAC; each phase sees the bitline non-linearity independently.
     """
-    g = get_curve(p.curve)
+    g = get_curve(p.curve, p)
     axes = tuple(range(x.ndim - w.ndim, x.ndim))
     mac_pos = jnp.sum(x * jnp.maximum(w, 0.0), axis=axes)
     mac_neg = jnp.sum(x * jnp.maximum(-w, 0.0), axis=axes)
@@ -96,7 +113,7 @@ def two_phase_mac(
 def hardware_conv_output(mac_pos: jax.Array, mac_neg: jax.Array,
                          p: PixelCircuitParams = DEFAULT_PIXEL) -> jax.Array:
     """Apply the per-phase circuit curve and subtract (normalized units)."""
-    g = get_curve(p.curve)
+    g = get_curve(p.curve, p)
     return g(mac_pos) - g(mac_neg)
 
 
@@ -128,7 +145,7 @@ def conv_voltage(
     With the threshold-matching offset, ``conv_norm >= theta`` iff
     ``V_CONV >= V_SW`` — this identity is what makes the MTJ a faithful
     implementation of the algorithmic comparison (tested in
-    tests/test_pixel.py). The buffer rails clip V_CONV to [0, 1.2*VDD]; the
+    tests/test_pixel_hoyer.py). The buffer rails clip V_CONV to [0, 1.2*VDD]; the
     paper notes saturation above V_SW is harmless (binary output).
     """
     v_th = algorithmic_threshold_to_volts(theta, p)

@@ -1,0 +1,18 @@
+"""Unified SensorFrontend backend API for the P2M first layer (DESIGN.md §2).
+
+One signature over the paper's four views of the in-pixel layer:
+
+    from repro import frontend
+    fe = frontend.SensorFrontend(frontend.FrontendConfig(backend="analog"))
+    acts, aux = fe(params, images, key=key)           # configured backend
+    acts, aux = fe(params, images, key=key, mode="pallas")   # per-call override
+"""
+from repro.frontend.api import (FrontendConfig, SensorFrontend,
+                                differentiable_backends, get_backend,
+                                list_backends, register_backend)
+from repro.frontend import backends as _backends  # registers ideal/analog/device/pallas
+from repro.frontend.shutter import global_shutter_readout
+
+__all__ = ["FrontendConfig", "SensorFrontend", "differentiable_backends",
+           "get_backend", "list_backends", "register_backend",
+           "global_shutter_readout"]

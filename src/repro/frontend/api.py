@@ -1,0 +1,126 @@
+"""SensorFrontend — the single API over the P2M in-pixel first layer.
+
+The paper's contribution is ONE physical layer viewed four ways: ideal conv,
+Hoyer-trained analog approximation, Monte-Carlo VC-MTJ device simulation, and
+a fused Pallas TPU kernel. This module makes those views *backends* behind a
+single signature (DESIGN.md §2):
+
+    frontend = SensorFrontend(FrontendConfig(p2m=..., backend="analog"))
+    params = frontend.init(key)
+    activations, aux = frontend(params, images, key=key, mode="device")
+
+``mode`` (optional) overrides the configured backend per call — this is what
+lets a training loop use ``analog`` and its eval loop use ``device`` or
+``pallas`` without any string-switching in model code.
+
+Every backend consumes the same ``P2MConfig`` (and through it the same
+``PixelCircuitParams`` / ``MTJParams``) and returns ``(activations, aux)``
+with the standard aux keys:
+
+    hoyer_loss   raw (un-scaled) Hoyer regularizer term — consumers apply
+                 ``hoyer_coeff`` exactly once; 0 for non-training backends
+    sparsity     fraction of zeros in the binary activation map
+    v_conv_mean / v_conv_min / v_conv_max
+                 statistics of the threshold-matched subtractor voltage that
+                 would drive the VC-MTJ (paper §2.2.2)
+
+Hardware backends (``device``, ``pallas``) additionally run the explicit
+global-shutter stage — ``mtj.burst_read`` of the stored MTJ states plus
+reset-pulse accounting (DESIGN.md §4) — and merge its stats into aux.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.core import p2m
+from repro.frontend import shutter
+
+# backend signature: (cfg, params, images, key) -> (activations, aux)
+BackendFn = Callable[["FrontendConfig", dict, jax.Array,
+                      Optional[jax.Array]], Tuple[jax.Array, Dict]]
+
+_BACKENDS: Dict[str, BackendFn] = {}
+# backends that leave their result stored in MTJ states and therefore go
+# through the global-shutter burst-read stage
+_STATEFUL: set = set()
+# backends that carry gradients (STE) and are safe under jax.grad
+_DIFFERENTIABLE: set = set()
+
+
+def register_backend(name: str, stateful: bool = False,
+                     differentiable: bool = False):
+    """Register a frontend backend.
+
+    ``stateful=True`` marks backends whose activations are physically held
+    in VC-MTJ states (global-shutter read); ``differentiable=True`` marks
+    backends usable under ``jax.grad`` (straight-through estimators).
+    """
+    def deco(fn: BackendFn) -> BackendFn:
+        _BACKENDS[name] = fn
+        if stateful:
+            _STATEFUL.add(name)
+        if differentiable:
+            _DIFFERENTIABLE.add(name)
+        return fn
+    return deco
+
+
+def get_backend(name: str) -> BackendFn:
+    if name not in _BACKENDS:
+        raise KeyError(f"unknown frontend backend {name!r}; "
+                       f"registered: {list_backends()}")
+    return _BACKENDS[name]
+
+
+def list_backends() -> list:
+    return sorted(_BACKENDS)
+
+
+def differentiable_backends() -> list:
+    """Backends safe to train through (STE gradients end to end)."""
+    return sorted(_DIFFERENTIABLE)
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    """Configuration of the sensor frontend (hashable — safe as a jit static).
+
+    ``p2m`` carries all the physics (circuit + device params); the remaining
+    fields select and tune the execution backend.
+    """
+    p2m: p2m.P2MConfig = p2m.P2MConfig()
+    backend: str = "analog"
+    global_shutter: bool = True   # run burst_read + reset accounting
+    interpret: bool = True        # Pallas interpret mode (CPU); False on TPU
+    block_n: int = 128            # Pallas patch-row block
+
+
+class SensorFrontend:
+    """The one surface every consumer of the P2M first layer talks to."""
+
+    def __init__(self, cfg: FrontendConfig = FrontendConfig()):
+        get_backend(cfg.backend)   # fail fast on typos
+        self.cfg = cfg
+
+    def init(self, key: jax.Array, dtype=None) -> dict:
+        kwargs = {} if dtype is None else {"dtype": dtype}
+        return p2m.init_params(key, self.cfg.p2m, **kwargs)
+
+    def __call__(self, params: dict, images: jax.Array, *,
+                 key: Optional[jax.Array] = None,
+                 mode: Optional[str] = None) -> Tuple[jax.Array, Dict]:
+        """images (B, H, W, C) in [0, 1] -> (binary activations, aux).
+
+        ``mode`` overrides ``cfg.backend`` for this call.
+        """
+        name = mode or self.cfg.backend
+        acts, aux = get_backend(name)(self.cfg, params, images, key)
+        if self.cfg.global_shutter and name in _STATEFUL:
+            acts, shutter_aux = shutter.global_shutter_readout(
+                acts, self.cfg.p2m.mtj)
+            aux = {**aux, **shutter_aux}
+        aux["sparsity"] = p2m.output_sparsity(acts)
+        return acts, aux

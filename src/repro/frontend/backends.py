@@ -1,0 +1,127 @@
+"""The four standard SensorFrontend backends (DESIGN.md §2).
+
+All four consume the same ``P2MConfig`` (pixel circuit + MTJ device params)
+and produce the same ``(activations, aux)`` contract; they differ only in
+which physical effects they model:
+
+  ideal    linear conv (no circuit curve) + Hoyer spike — the algorithmic
+           upper bound used for ablations.
+  analog   train-time path: two-phase circuit-curve conv + Hoyer spike with
+           straight-through gradients, optional Fig. 8 stochastic-switching
+           noise injection. Differentiable end to end.
+  device   hardware-eval path: Monte-Carlo per-MTJ Bernoulli switching at
+           the threshold-matched V_CONV, n-device majority vote (Fig. 5).
+  pallas   the fused TPU kernel (kernels/p2m_conv.py) — same math as
+           ``device`` with the majority vote folded into one Bernoulli draw
+           (distributionally identical; bit-exact vs kernels/ref.py).
+
+``hoyer_loss`` in aux is the RAW regularizer value — consumers scale by
+``hoyer_coeff`` exactly once (see models/vision.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hoyer, mtj, p2m, pixel
+from repro.frontend.api import FrontendConfig, register_backend
+
+
+def _theta(u: jax.Array, v_th: jax.Array) -> jax.Array:
+    """Hardware-mapped algorithmic threshold, in conv-output units."""
+    return hoyer.effective_threshold(u, v_th) * v_th
+
+
+def _v_conv_stats(u: jax.Array, theta: jax.Array,
+                  p: pixel.PixelCircuitParams) -> Dict:
+    """Statistics of the subtractor voltage driving the VC-MTJ (paper Fig. 4b)."""
+    v = pixel.conv_voltage(u, theta, p)
+    return {"v_conv_mean": jnp.mean(v), "v_conv_min": jnp.min(v),
+            "v_conv_max": jnp.max(v)}
+
+
+@register_backend("ideal", differentiable=True)
+def ideal_backend(cfg: FrontendConfig, params: dict, images: jax.Array,
+                  key: Optional[jax.Array]) -> Tuple[jax.Array, Dict]:
+    """Ideal (no circuit curve, deterministic) reference for ablations."""
+    pcfg = cfg.p2m
+    wq = p2m.quantize_weights(params["w"], pcfg.weight_bits)
+    u = p2m.phase_conv(images, wq, pcfg.stride)
+    o, hl = hoyer.hoyer_spike(u, params["v_th"])
+    aux = {"hoyer_loss": hl, **_v_conv_stats(u, _theta(u, params["v_th"]),
+                                             pcfg.pixel)}
+    return o, aux
+
+
+@register_backend("analog", differentiable=True)
+def analog_backend(cfg: FrontendConfig, params: dict, images: jax.Array,
+                   key: Optional[jax.Array]) -> Tuple[jax.Array, Dict]:
+    """Training path: circuit-curve conv + Hoyer spike + STE.
+
+    If cfg.p2m.noise_p_fail / noise_p_false are set (Fig. 8 robustness study)
+    and a key is given, activation bits are flipped with those probabilities
+    via a straight-through perturbation.
+    """
+    pcfg = cfg.p2m
+    u = p2m.hardware_conv(images, params["w"], pcfg)
+    o, hl = hoyer.hoyer_spike(u, params["v_th"])
+    if key is not None and (pcfg.noise_p_fail > 0 or pcfg.noise_p_false > 0):
+        k1, k2 = jax.random.split(key)
+        fail = jax.random.bernoulli(k1, pcfg.noise_p_fail, o.shape)
+        false = jax.random.bernoulli(k2, pcfg.noise_p_false, o.shape)
+        noisy = jnp.where(o > 0.5, 1.0 - fail.astype(o.dtype),
+                          false.astype(o.dtype))
+        o = o + jax.lax.stop_gradient(noisy - o)   # STE through the flips
+    aux = {"hoyer_loss": hl, **_v_conv_stats(u, _theta(u, params["v_th"]),
+                                             pcfg.pixel)}
+    return o, aux
+
+
+@register_backend("device", stateful=True)
+def device_backend(cfg: FrontendConfig, params: dict, images: jax.Array,
+                   key: Optional[jax.Array]) -> Tuple[jax.Array, Dict]:
+    """Hardware-eval path: full Monte-Carlo device simulation.
+
+    conv -> threshold-matching voltage -> per-MTJ stochastic switching
+    (switching_probability at the applied V_CONV) x n_redundant -> majority.
+    """
+    if key is None:
+        raise ValueError("the 'device' backend is stochastic — pass key=")
+    pcfg = cfg.p2m
+    u = p2m.hardware_conv(images, params["w"], pcfg)
+    theta = _theta(u, params["v_th"])
+    v_conv = pixel.conv_voltage(u, theta, pcfg.pixel)
+    p_sw = mtj.switching_probability(v_conv, pcfg.mtj.write_pulse_ps, pcfg.mtj)
+    o = mtj.sample_majority_activation(
+        key, p_sw, pcfg.mtj.n_redundant, pcfg.mtj.majority)
+    aux = {"hoyer_loss": jnp.zeros(()), "v_conv_mean": jnp.mean(v_conv),
+           "v_conv_min": jnp.min(v_conv), "v_conv_max": jnp.max(v_conv)}
+    return o, aux
+
+
+@register_backend("pallas", stateful=True)
+def pallas_backend(cfg: FrontendConfig, params: dict, images: jax.Array,
+                   key: Optional[jax.Array]) -> Tuple[jax.Array, Dict]:
+    """Fused Pallas TPU kernel path (interpret mode on CPU).
+
+    The dynamic Hoyer threshold is a global reduction over the frame, so it
+    is computed outside the kernel (one cheap pass); the kernel then fuses
+    conv -> curve -> voltage map -> switching probability -> folded majority
+    draw, with all constants threaded from cfg.p2m (DESIGN.md §5).
+    """
+    if key is None:
+        raise ValueError("the 'pallas' backend is stochastic — pass key=")
+    from repro.kernels import ops   # deferred: keep core import-light
+    pcfg = cfg.p2m
+    u = p2m.hardware_conv(images, params["w"], pcfg)
+    theta = _theta(u, params["v_th"])
+    wq = p2m.quantize_weights(params["w"], pcfg.weight_bits)
+    o = ops.p2m_conv(images, wq, theta, key,
+                     kernel=pcfg.kernel_size, stride=pcfg.stride,
+                     pixel_params=pcfg.pixel, mtj_params=pcfg.mtj,
+                     interpret=cfg.interpret, block_n=cfg.block_n)
+    aux = {"hoyer_loss": jnp.zeros(()),
+           **_v_conv_stats(u, theta, pcfg.pixel)}
+    return o, aux

@@ -12,6 +12,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import mtj as mtj_model
+from repro.core import pixel as pixel_model
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.p2m_conv import p2m_conv_pallas
 
@@ -41,14 +43,22 @@ def im2col(images: jax.Array, kernel: int, stride: int) -> jax.Array:
     return out.reshape(b * ho * wo, kernel * kernel * c)
 
 
-@functools.partial(jax.jit, static_argnames=("kernel", "stride", "n_mtj",
+@functools.partial(jax.jit, static_argnames=("kernel", "stride",
+                                             "pixel_params", "mtj_params",
                                              "interpret", "block_n"))
 def p2m_conv(images: jax.Array, w: jax.Array, theta: jax.Array,
              key: jax.Array, *, kernel: int = 3, stride: int = 2,
-             n_mtj: int = 8, interpret: bool = True, block_n: int = 256
+             pixel_params: pixel_model.PixelCircuitParams =
+             pixel_model.DEFAULT_PIXEL,
+             mtj_params: mtj_model.MTJParams = mtj_model.DEFAULT_MTJ,
+             interpret: bool = True, block_n: int = 256
              ) -> jax.Array:
     """Fused P2M layer. images (B,H,W,C) in [0,1]; w (k,k,C,Cout) signed
-    quantized weights; theta () threshold. Returns (B,H',W',Cout) binary."""
+    quantized weights; theta () threshold. Returns (B,H',W',Cout) binary.
+
+    ``pixel_params``/``mtj_params`` (frozen dataclasses, static for jit)
+    carry every circuit/device constant into the kernel — nothing is baked.
+    """
     b, h, wd, c = images.shape
     cout = w.shape[-1]
     ho, wo = h // stride, wd // stride
@@ -67,7 +77,8 @@ def p2m_conv(images: jax.Array, w: jax.Array, theta: jax.Array,
         bits_p = jnp.pad(bits_p, ((0, n_pad), (0, 0)))
     out = p2m_conv_pallas(patches.astype(jnp.float32), wm.astype(jnp.float32),
                           theta.reshape(1, 1).astype(jnp.float32), bits_p,
-                          n_mtj=n_mtj, block_n=block_n, interpret=interpret)
+                          pixel_params=pixel_params, mtj_params=mtj_params,
+                          block_n=block_n, interpret=interpret)
     return out[:n, :cout].reshape(b, ho, wo, cout)
 
 

@@ -13,37 +13,40 @@ from repro.core import pixel as pixel_model
 # p2m_conv oracle: fused in-pixel conv -> curve -> subtract -> MTJ majority
 # ---------------------------------------------------------------------------
 
-def majority_prob_poly(p: jax.Array, n: int = 8, m: int = 4) -> jax.Array:
-    """P(Binomial(n, p) >= m) as an explicit polynomial (kernel-friendly)."""
-    out = jnp.zeros_like(p)
-    from math import comb
-    for k in range(m, n + 1):
-        out = out + comb(n, k) * (p ** k) * ((1 - p) ** (n - k))
-    return out
+# single-sourced in core/mtj.py; re-exported because tests/benchmarks import
+# the oracle's majority fold from here
+majority_prob_poly = mtj_model.majority_prob_poly
 
 
 def p2m_conv_ref(patches: jax.Array, w: jax.Array, theta: jax.Array,
                  bits: jax.Array, *,
-                 vdd: float = 1.0, v_sw: float = 0.8, norm_range: float = 3.0,
-                 saturation: float = 2.5, n_mtj: int = 8) -> jax.Array:
-    """Oracle for the fused P2M kernel.
+                 pixel_params: pixel_model.PixelCircuitParams =
+                 pixel_model.DEFAULT_PIXEL,
+                 mtj_params: mtj_model.MTJParams = mtj_model.DEFAULT_MTJ
+                 ) -> jax.Array:
+    """Oracle for the fused P2M kernel — the core ``device`` reference.
 
     patches: (N, K) im2col rows; w: (K, C) signed quantized weights;
     theta: () algorithmic threshold (Hoyer extremum x v_th, in conv units);
-    bits: (N, C) uint32 random words (one Bernoulli draw; the 8-MTJ majority
+    bits: (N, C) uint32 random words (one Bernoulli draw; the n-MTJ majority
     is folded into the probability — distributionally identical).
     Returns float {0,1} activations (N, C).
+
+    Calls the *same* ``core/pixel.py`` / ``core/mtj.py`` functions the Pallas
+    kernel traces, so kernel-vs-ref parity is bit-exact (DESIGN.md §5).
     """
-    mac_pos = patches @ jnp.maximum(w, 0.0)
-    mac_neg = patches @ jnp.maximum(-w, 0.0)
-    g = lambda x: saturation * jnp.tanh(x / saturation)
+    mac_pos = jnp.dot(patches, jnp.maximum(w, 0.0),
+                      preferred_element_type=jnp.float32)
+    mac_neg = jnp.dot(patches, jnp.maximum(-w, 0.0),
+                      preferred_element_type=jnp.float32)
+    g = pixel_model.get_curve(pixel_params.curve, pixel_params)
     u = g(mac_pos) - g(mac_neg)
-    # threshold-matching voltage map: V = V_SW + k * (u - theta)
-    k = vdd / (2.0 * norm_range)
-    v = jnp.clip(v_sw + k * (u - theta), 0.0, 1.2 * vdd)
-    p_sw = mtj_model.switching_probability(v)
-    q = majority_prob_poly(p_sw, n_mtj, n_mtj // 2)
-    draw = (bits.astype(jnp.float32) / jnp.float32(2 ** 32)) < q
+    v = pixel_model.conv_voltage(u, theta, pixel_params)
+    p_sw = mtj_model.switching_probability(
+        v, mtj_params.write_pulse_ps, mtj_params)
+    q = mtj_model.majority_prob_poly(
+        p_sw, mtj_params.n_redundant, mtj_params.majority)
+    draw = (bits.astype(jnp.float32) * (1.0 / 2 ** 32)) < q
     return draw.astype(jnp.float32)
 
 

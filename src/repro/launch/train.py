@@ -3,6 +3,11 @@
     PYTHONPATH=src python -m repro.launch.train --arch stablelm-3b \
         --steps 200 --scale tiny --batch 8 --seq 128
 
+Vision archs (the paper's P2M sparse-BNNs) train through the SensorFrontend:
+
+    PYTHONPATH=src python -m repro.launch.train --arch vgg_tiny \
+        --steps 200 --frontend-backend analog --eval-backend device
+
 ``--scale tiny`` runs a reduced config on the host devices (the CPU demo /
 examples path); ``--scale full`` uses the production mesh (requires the
 actual chips, or the dry-run's forced host device count).
@@ -26,10 +31,53 @@ from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import lm
 from repro.train import Trainer
 
+VISION_ARCHS = ("vgg16", "vgg_tiny", "resnet18", "resnet20")
+
+
+def train_vision(args) -> None:
+    """Train a P2M sparse-BNN: SensorFrontend first layer + binary convs."""
+    from repro import frontend
+    from repro.data import ImageStream
+    from repro.models import vision
+    from repro.train import vision as vision_loop
+
+    trainable = frontend.differentiable_backends()
+    if args.frontend_backend not in trainable:
+        raise SystemExit(
+            f"--frontend-backend {args.frontend_backend!r} has no gradient "
+            f"path (stochastic device sampling); train with one of "
+            f"{trainable} and use --eval-backend for hardware eval")
+    cfg = vision.VisionConfig(name=args.arch, arch=args.arch, num_classes=10,
+                              frontend_backend=args.frontend_backend)
+    params = vision.init_params(jax.random.PRNGKey(0), cfg)
+    stream = ImageStream(hw=32, num_classes=10, global_batch=args.batch)
+
+    t0 = time.time()
+    params = vision_loop.fit(params, cfg, stream, args.steps, lr=args.lr,
+                             key=jax.random.PRNGKey(1),
+                             log_every=max(args.steps // 10, 1))
+    dt = time.time() - t0
+    print(f"{args.steps} steps in {dt:.1f}s "
+          f"({1e3 * dt / max(args.steps, 1):.0f} ms/step)")
+
+    # eval through the hardware backend (stochastic MTJ majority)
+    ev = ImageStream(hw=32, num_classes=10, global_batch=args.batch, seed=99)
+    acc_train, _ = vision_loop.evaluate(params, cfg, ev, n_batches=4)
+    ev = ImageStream(hw=32, num_classes=10, global_batch=args.batch, seed=99)
+    acc_hw, _ = vision_loop.evaluate(params, cfg, ev, n_batches=4,
+                                     backend=args.eval_backend,
+                                     key=jax.random.PRNGKey(2))
+    print(f"eval: {cfg.frontend_backend} {acc_train * 100:.1f}%  "
+          f"{args.eval_backend} {acc_hw * 100:.1f}%")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
+    ap.add_argument("--frontend-backend", default="analog",
+                    help="SensorFrontend backend for vision training")
+    ap.add_argument("--eval-backend", default="device",
+                    help="SensorFrontend backend for vision hardware eval")
     ap.add_argument("--scale", choices=("tiny", "full"), default="tiny")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
@@ -40,6 +88,10 @@ def main() -> None:
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--grad-compression", action="store_true")
     args = ap.parse_args()
+
+    if args.arch in VISION_ARCHS:
+        train_vision(args)
+        return
 
     cfg = configs.get_arch(args.arch)
     if args.scale == "tiny":

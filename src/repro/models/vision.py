@@ -12,6 +12,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import frontend
 from repro.core import hoyer, p2m
 from repro.models.params import ParamSpec, abstract_tree, axes_tree, init_tree
 
@@ -23,9 +24,19 @@ class VisionConfig:
     num_classes: int = 10
     in_hw: int = 32
     p2m: p2m.P2MConfig = p2m.P2MConfig()
+    frontend_backend: str = "analog"     # default SensorFrontend backend
+    frontend_interpret: bool = True      # False: compile the Pallas kernel (TPU)
+    frontend_block_n: int = 128          # Pallas patch-row block size
     weight_bits: int = 4
     remove_first_maxpool: bool = False   # paper's Model* variants
     hoyer_coeff: float = 1e-8
+
+    @property
+    def frontend(self) -> frontend.FrontendConfig:
+        return frontend.FrontendConfig(p2m=self.p2m,
+                                       backend=self.frontend_backend,
+                                       interpret=self.frontend_interpret,
+                                       block_n=self.frontend_block_n)
 
 
 _VGG_PLANS = {
@@ -112,18 +123,20 @@ def init_params(key: jax.Array, cfg: VisionConfig):
 
 
 def forward(params: Dict, images: jax.Array, cfg: VisionConfig, *,
-            mode: str = "train", key: Optional[jax.Array] = None
+            key: Optional[jax.Array] = None, backend: Optional[str] = None
             ) -> Tuple[jax.Array, jax.Array, Dict]:
-    """images: (B, H, W, C) in [0, 1]. Returns (logits, hoyer_loss, aux)."""
-    hoyer_total = jnp.zeros(())
-    if mode == "hardware":
-        x = p2m.forward_hardware(params["p2m"], images, cfg.p2m, key)
-    else:
-        # key enables the Fig. 8 stochastic-switching noise injection when
-        # cfg.p2m.noise_p_* are set
-        x, hl = p2m.forward_train(params["p2m"], images, cfg.p2m, key=key)
-        hoyer_total += hl
-    p2m_sparsity = p2m.output_sparsity(x)
+    """images: (B, H, W, C) in [0, 1]. Returns (logits, hoyer_loss, aux).
+
+    The first layer goes through the SensorFrontend; ``backend`` overrides
+    ``cfg.frontend_backend`` per call (e.g. train with "analog", eval with
+    "device" or "pallas"). ``key`` feeds whichever backend is stochastic —
+    including the Fig. 8 noise injection of the analog path.
+    """
+    fe = frontend.SensorFrontend(cfg.frontend)
+    x, fe_aux = fe(params["p2m"], images, key=key, mode=backend)
+    # raw hoyer term; cfg.hoyer_coeff is applied exactly once, at the end
+    hoyer_total = fe_aux["hoyer_loss"]
+    p2m_sparsity = fe_aux["sparsity"]
 
     if cfg.arch.startswith("vgg"):
         i = 0
@@ -157,12 +170,18 @@ def forward(params: Dict, images: jax.Array, cfg: VisionConfig, *,
 
     x = jnp.mean(x, axis=(1, 2))
     logits = x @ params["head"]["w"] + params["head"]["b"]
-    aux = {"p2m_sparsity": p2m_sparsity}
+    # surface the full frontend aux (V_CONV stats, global-shutter accounting
+    # on hardware backends) minus the loss term consumed above
+    aux = {"p2m_sparsity": p2m_sparsity,
+           **{k: v for k, v in fe_aux.items()
+              if k not in ("hoyer_loss", "sparsity")}}
     return logits, cfg.hoyer_coeff * hoyer_total, aux
 
 
 def loss_fn(params, batch, cfg: VisionConfig, key=None):
-    logits, hloss, aux = forward(params, batch["image"], cfg)
+    # key reaches the frontend: this is what activates the Fig. 8
+    # stochastic-switching noise-injection study during training
+    logits, hloss, aux = forward(params, batch["image"], cfg, key=key)
     logp = jax.nn.log_softmax(logits)
     nll = -jnp.mean(jnp.take_along_axis(logp, batch["label"][:, None], 1))
     acc = jnp.mean((jnp.argmax(logits, -1) == batch["label"]).astype(jnp.float32))

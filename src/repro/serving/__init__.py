@@ -1,1 +1,2 @@
 from repro.serving.engine import ServingEngine, make_prefill_step, make_decode_step
+from repro.serving.vision import VisionEngine

@@ -1,0 +1,62 @@
+"""VisionEngine: serve camera frames through the SensorFrontend + backbone.
+
+The serving counterpart of the P2M story: an edge camera produces frames,
+the in-pixel frontend (any registered backend — typically ``device`` or
+``pallas`` for deployment realism, ``analog``/``ideal`` for upper bounds)
+binarizes them at the sensor, and the sparse-BNN backbone classifies. The
+whole step is jit-compiled once per (batch shape, backend).
+
+    engine = VisionEngine(cfg, params, backend="pallas")
+    out = engine.classify(frames)                       # one batch
+    for out in engine.stream(frame_batches):            # a frame stream
+        ...
+
+``out`` is a dict with ``labels``, ``probs``, and the frontend aux
+(sparsity, V_CONV stats, global-shutter energy accounting) so a deployment
+can monitor the sensor link, not just the predictions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Iterable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import vision
+
+
+class VisionEngine:
+    """Synchronous batched frame-classification engine."""
+
+    def __init__(self, cfg: vision.VisionConfig, params,
+                 backend: Optional[str] = None, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.backend = backend or cfg.frontend_backend
+        self._key = jax.random.PRNGKey(seed)
+        self._frame_count = 0
+        self._step = jax.jit(functools.partial(self._forward, cfg=cfg,
+                                               backend=self.backend))
+
+    @staticmethod
+    def _forward(params, frames, key, *, cfg, backend):
+        logits, _, aux = vision.forward(params, frames, cfg, key=key,
+                                        backend=backend)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return {"labels": jnp.argmax(logits, -1), "probs": probs, **aux}
+
+    def classify(self, frames: jax.Array,
+                 key: Optional[jax.Array] = None) -> Dict:
+        """frames: (B, H, W, C) in [0, 1]. Returns labels/probs/frontend aux."""
+        if key is None:
+            key = jax.random.fold_in(self._key, self._frame_count)
+        self._frame_count += 1
+        return self._step(self.params, frames, key)
+
+    def stream(self, frame_batches: Iterable[jax.Array]) -> Iterator[Dict]:
+        """Classify a stream of frame batches; per-frame rng is folded in so
+        the stochastic MTJ draws differ frame to frame (global shutter:
+        every frame is one exposure + burst read)."""
+        for frames in frame_batches:
+            yield self.classify(frames)

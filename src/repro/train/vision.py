@@ -1,0 +1,62 @@
+"""Shared SGD train/eval loops for the P2M sparse-BNN vision models.
+
+One implementation used by both the production launcher
+(``repro.launch.train --arch vgg_tiny``) and the pedagogical example
+(``examples/train_p2m_vision.py``), so the step rule, key folding, and
+hardware-eval accounting cannot drift between them.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import vision
+
+
+def fit(params, cfg: vision.VisionConfig, stream, steps: int,
+        lr: float = 3e-3, key: Optional[jax.Array] = None,
+        log_every: Optional[int] = None,
+        log_fn: Callable[[str], None] = print):
+    """Plain-SGD training through the SensorFrontend.
+
+    ``key`` (folded per step) reaches the frontend via ``vision.loss_fn`` —
+    this is what drives the Fig. 8 noise-injection study when
+    ``cfg.p2m.noise_p_*`` are set.
+    """
+    key = key if key is not None else jax.random.PRNGKey(42)
+
+    @jax.jit
+    def step(p, batch, k):
+        (l, aux), g = jax.value_and_grad(
+            lambda p_: vision.loss_fn(p_, batch, cfg, k), has_aux=True)(p)
+        return jax.tree.map(lambda w, gw: w - lr * gw, p, g), l, aux
+
+    for i in range(steps):
+        params, l, aux = step(params, stream.next_batch(),
+                              jax.random.fold_in(key, i))
+        if log_every and (i + 1) % log_every == 0:
+            log_fn(f"step {i + 1:4d}  loss {float(l):.4f}  "
+                   f"acc {float(aux['acc']) * 100:5.1f}%  "
+                   f"p2m sparsity {float(aux['p2m_sparsity']) * 100:5.1f}%")
+    return params
+
+
+def evaluate(params, cfg: vision.VisionConfig, stream, n_batches: int = 4,
+             backend: Optional[str] = None,
+             key: Optional[jax.Array] = None) -> Tuple[float, int]:
+    """Accuracy over ``n_batches`` through the given frontend backend.
+
+    Returns (accuracy, n_examples). Pass ``key`` for stochastic backends
+    (``device``/``pallas``); it is folded per batch.
+    """
+    correct, total = 0.0, 0
+    for j in range(n_batches):
+        b = stream.next_batch()
+        k = jax.random.fold_in(key, j) if key is not None else None
+        logits, _, _ = vision.forward(params, b["image"], cfg,
+                                      backend=backend, key=k)
+        correct += float(jnp.sum(jnp.argmax(logits, -1) == b["label"]))
+        total += b["label"].shape[0]
+    return correct / total, total

@@ -1,0 +1,14 @@
+"""Test bootstrap: make ``src/`` and the tests dir importable.
+
+Lets ``python -m pytest`` work without the ``PYTHONPATH=src`` env var (the
+tier-1 command still sets it; scripts/ci.sh uses it) and lets test modules
+import the ``hypothesis_shim`` helper.
+"""
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(os.path.dirname(_HERE), "src")
+for path in (_HERE, _SRC):
+    if path not in sys.path:
+        sys.path.insert(0, path)

@@ -1,0 +1,100 @@
+"""Use real ``hypothesis`` when installed; otherwise a tiny deterministic shim.
+
+The container does not ship the optional ``hypothesis`` dependency, and four
+test modules use it for property tests. Rather than skipping those modules
+wholesale, this shim provides just the API surface they use — ``given``,
+``settings``, and the ``floats`` / ``integers`` / ``sampled_from``
+strategies — with a deterministic boundary+interior example grid (min, max,
+midpoint, ...). Property coverage is narrower than real hypothesis but the
+invariants still execute; installing ``hypothesis`` (requirements.txt
+extras) upgrades these tests to real property-based search transparently.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+
+    class _Strategy:
+        def __init__(self, examples):
+            self.examples = list(examples)
+
+    class strategies:  # noqa: N801 — mimics the hypothesis module name
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            lo, hi = float(min_value), float(max_value)
+            mid = 0.5 * (lo + hi)
+            return _Strategy([lo, hi, mid, lo + 0.25 * (hi - lo),
+                              lo + 0.9 * (hi - lo)])
+
+        @staticmethod
+        def integers(min_value=0, max_value=10, **_):
+            lo, hi = int(min_value), int(max_value)
+            mid = (lo + hi) // 2
+            vals = [lo, hi, mid, min(lo + 1, hi), max(hi - 1, lo)]
+            seen, out = set(), []
+            for v in vals:
+                if v not in seen:
+                    seen.add(v)
+                    out.append(v)
+            return _Strategy(out)
+
+        @staticmethod
+        def sampled_from(seq):
+            return _Strategy(list(seq)[:5])
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True])
+
+    def settings(*_, **__):
+        """No-op decorator factory (max_examples etc. are shim-controlled)."""
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*s_args, **s_kwargs):
+        """Run the test over a zip-cycled grid of the strategies' examples.
+
+        Positional strategies append to the call's positional args (after
+        ``self`` for methods), keyword strategies to kwargs — matching how
+        these test suites use hypothesis. At most 5 examples per test keeps
+        the fallback fast.
+        """
+        def deco(fn):
+            strats = [*s_args, *s_kwargs.values()]
+            names = list(s_kwargs)
+            n = max(len(s.examples) for s in strats)
+            cases = []
+            for i in range(min(n, 5)):
+                vals = [s.examples[i % len(s.examples)] for s in strats]
+                pos = vals[:len(s_args)]
+                kw = dict(zip(names, vals[len(s_args):]))
+                cases.append((pos, kw))
+
+            @functools.wraps(fn)
+            def wrapper(*call_args, **call_kwargs):
+                for pos, kw in cases:
+                    fn(*call_args, *pos, **{**call_kwargs, **kw})
+
+            # hide the strategy-bound parameters from pytest's fixture
+            # resolution: expose only the leading params (self, fixtures)
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            consumed = set(names)
+            if s_args:   # positional strategies fill from the right
+                consumed |= {p.name for p in params[-len(s_args):]}
+            wrapper.__signature__ = sig.replace(
+                parameters=[p for p in params if p.name not in consumed])
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
+
+
+st = strategies
+__all__ = ["given", "settings", "strategies", "st", "HAVE_HYPOTHESIS"]

@@ -124,13 +124,14 @@ class TestP2MConvKernel:
         assert abs(float(jnp.mean(explicit)) - float(jnp.mean(folded))) < 0.02
 
     def test_kernel_pipeline_matches_core_p2m_statistics(self):
-        """Kernel activation rate ~ core/p2m.forward_hardware rate (same
+        """Kernel activation rate ~ the frontend 'device' backend rate (same
         device model, independent randomness)."""
+        from repro import frontend
         img, w = self._data(seed=5, b=4, hw=32)
         cfg = p2m_core.P2MConfig()
         params = {"w": w, "v_th": jnp.asarray(1.0)}
-        hw_out = p2m_core.forward_hardware(params, img, cfg,
-                                           jax.random.PRNGKey(7))
+        fe = frontend.SensorFrontend(frontend.FrontendConfig(p2m=cfg))
+        hw_out, _ = fe(params, img, key=jax.random.PRNGKey(7), mode="device")
         from repro.core import hoyer
         u = p2m_core.hardware_conv(img, w, cfg)
         theta = hoyer.effective_threshold(u, params["v_th"]) * params["v_th"]

@@ -4,21 +4,37 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import frontend
 from repro.core import energy, mtj, p2m
 
 
 CFG = p2m.P2MConfig()
+FE = frontend.SensorFrontend(frontend.FrontendConfig(p2m=CFG))
 
 
 def _params():
     return p2m.init_params(jax.random.PRNGKey(0), CFG)
 
 
+def _forward_train(params, x, cfg=None, key=None):
+    fe = FE if cfg is None else frontend.SensorFrontend(
+        frontend.FrontendConfig(p2m=cfg))
+    o, aux = fe(params, x, key=key, mode="analog")
+    return o, aux["hoyer_loss"]
+
+
+def _forward_hardware(params, x, key, cfg=None):
+    fe = FE if cfg is None else frontend.SensorFrontend(
+        frontend.FrontendConfig(p2m=cfg))
+    o, _ = fe(params, x, key=key, mode="device")
+    return o
+
+
 class TestP2MConv:
     def test_shapes_and_binary(self):
         params = _params()
         x = jax.random.uniform(jax.random.PRNGKey(1), (2, 32, 32, 3))
-        o, hl = p2m.forward_train(params, x, CFG)
+        o, hl = _forward_train(params, x)
         assert o.shape == (2, 16, 16, 32)
         assert set(np.unique(np.asarray(o)).tolist()) <= {0.0, 1.0}
         assert np.isfinite(float(hl))
@@ -35,7 +51,7 @@ class TestP2MConv:
         x = jax.random.uniform(jax.random.PRNGKey(3), (1, 16, 16, 3))
 
         def loss(p):
-            o, hl = p2m.forward_train(p, x, CFG)
+            o, hl = _forward_train(p, x)
             return jnp.mean(o * jnp.ones_like(o)) + hl
         g = jax.grad(loss)(params)
         assert float(jnp.sum(jnp.abs(g["w"]))) > 0
@@ -44,8 +60,8 @@ class TestP2MConv:
         """Majority-of-8 hardware sim ~ deterministic threshold (Fig. 5)."""
         params = _params()
         x = jax.random.uniform(jax.random.PRNGKey(4), (4, 32, 32, 3))
-        o_det, _ = p2m.forward_train(params, x, CFG)
-        o_hw = p2m.forward_hardware(params, x, CFG, jax.random.PRNGKey(5))
+        o_det, _ = _forward_train(params, x)
+        o_hw = _forward_hardware(params, x, jax.random.PRNGKey(5))
         # the paper's guarantee holds for activations with voltage margin:
         # Hoyer training pushes pre-activations away from the threshold, and
         # the 8-MTJ majority makes errors < 0.1% there (Fig. 5). Random
@@ -66,8 +82,8 @@ class TestP2MConv:
         cfg = p2m.P2MConfig(noise_p_fail=0.5, noise_p_false=0.5)
         params = _params()
         x = jax.random.uniform(jax.random.PRNGKey(6), (2, 16, 16, 3))
-        o_clean, _ = p2m.forward_train(params, x, cfg)
-        o_noisy, _ = p2m.forward_train(params, x, cfg, key=jax.random.PRNGKey(7))
+        o_clean, _ = _forward_train(params, x, cfg)
+        o_noisy, _ = _forward_train(params, x, cfg, key=jax.random.PRNGKey(7))
         assert float(jnp.mean(jnp.abs(o_clean - o_noisy))) > 0.1
 
     def test_sparsity_measure(self):

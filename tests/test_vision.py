@@ -33,7 +33,7 @@ def test_hardware_mode_runs(subtests=None):
     cfg = vision.VisionConfig(name="t", arch="vgg_tiny")
     params = vision.init_params(jax.random.PRNGKey(0), cfg)
     x = jax.random.uniform(jax.random.PRNGKey(1), (2, 32, 32, 3))
-    logits, _, _ = vision.forward(params, x, cfg, mode="hardware",
+    logits, _, _ = vision.forward(params, x, cfg, backend="device",
                                   key=jax.random.PRNGKey(2))
     assert bool(jnp.all(jnp.isfinite(logits)))
 
