@@ -53,6 +53,13 @@ def bench_frontend_backends() -> List[Row]:
                      (time.perf_counter() - t0) / 3 * 1e6, "per-frame-batch"))
         rows.append((f"frontend/{mode}_sparsity",
                      float(aux["sparsity"]) * 100, "sparsity_%"))
+        if "read_energy_pj" in aux:
+            # global-shutter accounting — PER FRAME by contract
+            # (frontend/shutter.py normalizes by the exposure count)
+            rows.append((f"frontend/{mode}_read_energy_pj",
+                         float(aux["read_energy_pj"]), "pJ/frame"))
+            rows.append((f"frontend/{mode}_reset_energy_pj",
+                         float(aux["reset_energy_pj"]), "pJ/frame"))
     for a, b in (("analog", "device"), ("device", "pallas")):
         agree = float(jnp.mean((outs[a] == outs[b]).astype(jnp.float32)))
         rows.append((f"frontend/agree_{a}_vs_{b}", agree * 100,
@@ -91,29 +98,17 @@ def bench_fig5_multi_mtj() -> List[Row]:
 def _train_vision(cfg: vision.VisionConfig, steps: int = 120,
                   noise=(0.0, 0.0), binary=True, seed=0):
     import dataclasses as dc
+
+    from repro.train.vision import fit
     p2m_cfg = dc.replace(cfg.p2m, noise_p_fail=noise[0], noise_p_false=noise[1])
     cfg = dc.replace(cfg, p2m=p2m_cfg)
     params = vision.init_params(jax.random.PRNGKey(seed), cfg)
     stream = ImageStream(hw=cfg.in_hw, num_classes=cfg.num_classes,
                          global_batch=64, seed=seed)
-    lr = 3e-3
-
-    @jax.jit
-    def step(p, batch, key):
-        def loss(p_):
-            logits, hloss, aux = vision.forward(p_, batch["image"], cfg,
-                                                key=key)
-            lp = jax.nn.log_softmax(logits)
-            nll = -jnp.mean(jnp.take_along_axis(lp, batch["label"][:, None], 1))
-            return nll + hloss, aux
-        (l, aux), g = jax.value_and_grad(loss, has_aux=True)(p)
-        p = jax.tree.map(lambda w, gw: w - lr * gw, p, g)
-        return p, l, aux
-
-    key = jax.random.PRNGKey(seed + 1)
-    for i in range(steps):
-        params, l, aux = step(params, stream.next_batch(),
-                              jax.random.fold_in(key, i))
+    # the SHARED train loop (train/vision.py) — one step rule, one place for
+    # the BN EMA fold, no benchmark-local drift
+    params = fit(params, cfg, stream, steps, lr=3e-3,
+                 key=jax.random.PRNGKey(seed + 1))
     # eval
     correct, total, spars = 0.0, 0, []
     ev = ImageStream(hw=cfg.in_hw, num_classes=cfg.num_classes,

@@ -1,6 +1,10 @@
 #!/usr/bin/env bash
-# Minimal CI: the tier-1 verify command (see ROADMAP.md).
+# Minimal CI: the tier-1 verify command (see ROADMAP.md) + the frontend
+# throughput benchmark in smoke mode (writes BENCH_frontend.json so the
+# single-pass-vs-double-conv speedup is tracked on every run).
 # Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/frontend_bench.py --smoke --out BENCH_frontend.json

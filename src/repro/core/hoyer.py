@@ -21,10 +21,15 @@ def clip01(z: jax.Array) -> jax.Array:
     return jnp.clip(z, 0.0, 1.0)
 
 
-def hoyer_extremum(z_clip: jax.Array) -> jax.Array:
-    """E(z) = sum(z^2)/sum(|z|): the Hoyer-regularizer extremum (scalar)."""
-    num = jnp.sum(jnp.square(z_clip))
-    den = jnp.sum(jnp.abs(z_clip))
+def hoyer_extremum(z_clip: jax.Array, axis=None,
+                   keepdims: bool = False) -> jax.Array:
+    """E(z) = sum(z^2)/sum(|z|): the Hoyer-regularizer extremum.
+
+    Global (scalar) by default; pass ``axis``/``keepdims`` for per-example
+    thresholds (eval-mode deployment semantics in models/vision.py).
+    """
+    num = jnp.sum(jnp.square(z_clip), axis=axis, keepdims=keepdims)
+    den = jnp.sum(jnp.abs(z_clip), axis=axis, keepdims=keepdims)
     return num / jnp.maximum(den, 1e-9)
 
 

@@ -20,6 +20,9 @@ with the standard aux keys:
     hoyer_loss   raw (un-scaled) Hoyer regularizer term — consumers apply
                  ``hoyer_coeff`` exactly once; 0 for non-training backends
     sparsity     fraction of zeros in the binary activation map
+    theta        the global hardware-mapped Hoyer threshold, in conv-output
+                 units (for ``pallas`` it is combined from kernel-A partial
+                 reductions rather than a shadow conv pass — DESIGN.md §5)
     v_conv_mean / v_conv_min / v_conv_max
                  statistics of the threshold-matched subtractor voltage that
                  would drive the VC-MTJ (paper §2.2.2)
@@ -95,7 +98,11 @@ class FrontendConfig:
     backend: str = "analog"
     global_shutter: bool = True   # run burst_read + reset accounting
     interpret: bool = True        # Pallas interpret mode (CPU); False on TPU
-    block_n: int = 128            # Pallas patch-row block
+    block_n: int = 512            # kernel-A patch-row block (the MXU matmul
+                                  # tile; ~0.6 MB VMEM/block at K=C=128)
+    block_n_elem: int = 4096      # kernel-B row-block cap (elementwise, no
+                                  # MXU tile: bigger blocks amortize dispatch;
+                                  # ~6 MB VMEM/block at C=128)
 
 
 class SensorFrontend:
@@ -119,8 +126,9 @@ class SensorFrontend:
         name = mode or self.cfg.backend
         acts, aux = get_backend(name)(self.cfg, params, images, key)
         if self.cfg.global_shutter and name in _STATEFUL:
+            # one exposure per batch element: shutter stats are per frame
             acts, shutter_aux = shutter.global_shutter_readout(
-                acts, self.cfg.p2m.mtj)
+                acts, self.cfg.p2m.mtj, frames=acts.shape[0])
             aux = {**aux, **shutter_aux}
         aux["sparsity"] = p2m.output_sparsity(acts)
         return acts, aux

@@ -11,9 +11,12 @@ which physical effects they model:
            noise injection. Differentiable end to end.
   device   hardware-eval path: Monte-Carlo per-MTJ Bernoulli switching at
            the threshold-matched V_CONV, n-device majority vote (Fig. 5).
-  pallas   the fused TPU kernel (kernels/p2m_conv.py) — same math as
-           ``device`` with the majority vote folded into one Bernoulli draw
-           (distributionally identical; bit-exact vs kernels/ref.py).
+  pallas   the single-pass two-kernel TPU pipeline (kernels/p2m_conv.py) —
+           same math as ``device`` with the majority vote folded into one
+           Bernoulli draw (distributionally identical; bit-exact vs
+           kernels/ref.py). The patch matmul runs exactly once; the Hoyer
+           threshold and V_CONV stats come from in-kernel partial
+           reductions, not a shadow conv pass.
 
 ``hoyer_loss`` in aux is the RAW regularizer value — consumers scale by
 ``hoyer_coeff`` exactly once (see models/vision.py).
@@ -50,8 +53,9 @@ def ideal_backend(cfg: FrontendConfig, params: dict, images: jax.Array,
     wq = p2m.quantize_weights(params["w"], pcfg.weight_bits)
     u = p2m.phase_conv(images, wq, pcfg.stride)
     o, hl = hoyer.hoyer_spike(u, params["v_th"])
-    aux = {"hoyer_loss": hl, **_v_conv_stats(u, _theta(u, params["v_th"]),
-                                             pcfg.pixel)}
+    theta = _theta(u, params["v_th"])
+    aux = {"hoyer_loss": hl, "theta": theta,
+           **_v_conv_stats(u, theta, pcfg.pixel)}
     return o, aux
 
 
@@ -74,8 +78,9 @@ def analog_backend(cfg: FrontendConfig, params: dict, images: jax.Array,
         noisy = jnp.where(o > 0.5, 1.0 - fail.astype(o.dtype),
                           false.astype(o.dtype))
         o = o + jax.lax.stop_gradient(noisy - o)   # STE through the flips
-    aux = {"hoyer_loss": hl, **_v_conv_stats(u, _theta(u, params["v_th"]),
-                                             pcfg.pixel)}
+    theta = _theta(u, params["v_th"])
+    aux = {"hoyer_loss": hl, "theta": theta,
+           **_v_conv_stats(u, theta, pcfg.pixel)}
     return o, aux
 
 
@@ -96,7 +101,8 @@ def device_backend(cfg: FrontendConfig, params: dict, images: jax.Array,
     p_sw = mtj.switching_probability(v_conv, pcfg.mtj.write_pulse_ps, pcfg.mtj)
     o = mtj.sample_majority_activation(
         key, p_sw, pcfg.mtj.n_redundant, pcfg.mtj.majority)
-    aux = {"hoyer_loss": jnp.zeros(()), "v_conv_mean": jnp.mean(v_conv),
+    aux = {"hoyer_loss": jnp.zeros(()), "theta": theta,
+           "v_conv_mean": jnp.mean(v_conv),
            "v_conv_min": jnp.min(v_conv), "v_conv_max": jnp.max(v_conv)}
     return o, aux
 
@@ -104,24 +110,24 @@ def device_backend(cfg: FrontendConfig, params: dict, images: jax.Array,
 @register_backend("pallas", stateful=True)
 def pallas_backend(cfg: FrontendConfig, params: dict, images: jax.Array,
                    key: Optional[jax.Array]) -> Tuple[jax.Array, Dict]:
-    """Fused Pallas TPU kernel path (interpret mode on CPU).
+    """Single-pass Pallas TPU kernel pipeline (interpret mode on CPU).
 
-    The dynamic Hoyer threshold is a global reduction over the frame, so it
-    is computed outside the kernel (one cheap pass); the kernel then fuses
-    conv -> curve -> voltage map -> switching probability -> folded majority
-    draw, with all constants threaded from cfg.p2m (DESIGN.md §5).
+    The patch matmul runs exactly once, in kernel A, which also emits the
+    per-block partial reductions for the *global* Hoyer threshold; a scalar
+    host combine produces theta; kernel B consumes the cached pre-activation
+    through voltage map -> switching probability -> folded majority draw and
+    emits the V_CONV partials (DESIGN.md §5). No shadow pure-JAX conv, no
+    duplicate weight quantization — every aux stat comes out of the kernels.
     """
     if key is None:
         raise ValueError("the 'pallas' backend is stochastic — pass key=")
     from repro.kernels import ops   # deferred: keep core import-light
     pcfg = cfg.p2m
-    u = p2m.hardware_conv(images, params["w"], pcfg)
-    theta = _theta(u, params["v_th"])
     wq = p2m.quantize_weights(params["w"], pcfg.weight_bits)
-    o = ops.p2m_conv(images, wq, theta, key,
-                     kernel=pcfg.kernel_size, stride=pcfg.stride,
-                     pixel_params=pcfg.pixel, mtj_params=pcfg.mtj,
-                     interpret=cfg.interpret, block_n=cfg.block_n)
-    aux = {"hoyer_loss": jnp.zeros(()),
-           **_v_conv_stats(u, theta, pcfg.pixel)}
-    return o, aux
+    o, kernel_aux = ops.p2m_frontend(
+        images, wq, params["v_th"], key,
+        kernel=pcfg.kernel_size, stride=pcfg.stride,
+        pixel_params=pcfg.pixel, mtj_params=pcfg.mtj,
+        interpret=cfg.interpret, block_n=cfg.block_n,
+        block_n_elem=cfg.block_n_elem)
+    return o, {"hoyer_loss": jnp.zeros(()), **kernel_aux}

@@ -26,6 +26,8 @@ def global_shutter_readout(
     states: jax.Array,
     mtj_params: mtj.MTJParams = mtj.DEFAULT_MTJ,
     consts: energy.EnergyConstants = energy.DEFAULT_ENERGY,
+    *,
+    frames: int = 1,
 ) -> Tuple[jax.Array, Dict]:
     """Burst-read stored MTJ states and account for the shutter overheads.
 
@@ -35,10 +37,18 @@ def global_shutter_readout(
     — with a healthy TMR margin it is identical to ``states``, and the
     round-trip is what tests/test_frontend.py asserts.
 
+    ``frames`` is the number of exposures held in ``states`` — for a batched
+    (B, H', W', C) map pass ``frames=B`` (``SensorFrontend`` does). The
+    energy/pulse stats are normalized by it so they are genuinely PER FRAME,
+    matching the docstring contract; a single unbatched map is the default.
+    (History: the seed summed over the whole batch while documenting the
+    keys as per-frame, so the reported read energy scaled with batch size.)
+
     Stats (per frame, traced scalars):
       activated_fraction  fraction of neurons whose majority vote activated
       reset_pulses        neuron-level estimate of devices flipping under the
-                          global reset: activated neurons x n_redundant
+                          global reset: activated neurons x n_redundant,
+                          averaged over the frames in the batch
       read_energy_pj      comparator strobes: every device is read once
       reset_energy_pj     VCMA energy of the estimated flips
 
@@ -52,9 +62,9 @@ def global_shutter_readout(
     miscount is negligible against the frame's integration energy.
     """
     read_bits = mtj.burst_read(states, mtj_params)
-    n_neurons = states.size
+    n_neurons = states.size // frames          # per frame
     n_dev = n_neurons * mtj_params.n_redundant
-    activated = jnp.sum(states)
+    activated = jnp.sum(states) / frames       # per frame
     reset_pulses = activated * mtj_params.n_redundant
     stats = {
         "activated_fraction": activated / n_neurons,

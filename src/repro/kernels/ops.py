@@ -15,7 +15,9 @@ import jax.numpy as jnp
 from repro.core import mtj as mtj_model
 from repro.core import pixel as pixel_model
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.p2m_conv import p2m_conv_pallas
+from repro.kernels.p2m_conv import (combine_hoyer_partials,
+                                    combine_v_conv_partials, p2m_conv_pallas,
+                                    p2m_phase_a_pallas, p2m_phase_b_pallas)
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -27,12 +29,34 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, pad)
 
 
+def conv_out_hw(h: int, stride: int) -> int:
+    """SAME-padding output extent: ceil(h / stride)."""
+    return -(-h // stride)
+
+
 def im2col(images: jax.Array, kernel: int, stride: int) -> jax.Array:
-    """NHWC -> (B*H'*W', k*k*C) patch rows (SAME padding)."""
+    """NHWC -> (B*H'*W', k*k*C) patch rows (SAME padding, odd kernels only).
+
+    Window placement matches ``jax.lax.conv_general_dilated(..., "SAME")``
+    exactly: output extent ceil(h/stride) and asymmetric padding with the
+    extra element on the high side — so the patch matmul samples the same
+    pixels as the pure-JAX conv backends. (The old symmetric ``kernel // 2``
+    padding was off by one pixel for strided even-size inputs, silently
+    misaligning the pallas backend against ``p2m.hardware_conv``.) An even
+    kernel has no SAME-consistent symmetric interpretation at all, so it is
+    rejected up front instead of silently mis-padding.
+    """
+    if kernel % 2 == 0:
+        raise ValueError(
+            f"im2col only supports odd kernel sizes (got kernel={kernel}): "
+            "even kernels cannot reproduce SAME convolution placement and "
+            "would silently mis-pad")
     b, h, w, c = images.shape
-    ph = pw = kernel // 2
-    x = jnp.pad(images, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
-    ho, wo = h // stride, w // stride
+    ho, wo = conv_out_hw(h, stride), conv_out_hw(w, stride)
+    pad_h = max((ho - 1) * stride + kernel - h, 0)
+    pad_w = max((wo - 1) * stride + kernel - w, 0)
+    x = jnp.pad(images, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+                         (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
     idx = jnp.arange(ho) * stride
     jdx = jnp.arange(wo) * stride
     patches = []
@@ -53,15 +77,21 @@ def p2m_conv(images: jax.Array, w: jax.Array, theta: jax.Array,
              mtj_params: mtj_model.MTJParams = mtj_model.DEFAULT_MTJ,
              interpret: bool = True, block_n: int = 256
              ) -> jax.Array:
-    """Fused P2M layer. images (B,H,W,C) in [0,1]; w (k,k,C,Cout) signed
-    quantized weights; theta () threshold. Returns (B,H',W',Cout) binary.
+    """Legacy fused P2M layer (pre-split). images (B,H,W,C) in [0,1];
+    w (k,k,C,Cout) signed quantized weights; theta () threshold. Returns
+    (B,H',W',Cout) binary.
+
+    Requires ``theta`` up front — the caller must run its own conv pass to
+    produce it, which is exactly the double-conv the single-pass
+    ``p2m_frontend`` pipeline removes. Kept as the benchmark baseline and a
+    fused-path regression target; the frontend no longer calls it.
 
     ``pixel_params``/``mtj_params`` (frozen dataclasses, static for jit)
     carry every circuit/device constant into the kernel — nothing is baked.
     """
     b, h, wd, c = images.shape
     cout = w.shape[-1]
-    ho, wo = h // stride, wd // stride
+    ho, wo = conv_out_hw(h, stride), conv_out_hw(wd, stride)
     patches = im2col(images, kernel, stride)                 # (N, K)
     wm = w.reshape(kernel * kernel * c, cout)
     n = patches.shape[0]
@@ -80,6 +110,77 @@ def p2m_conv(images: jax.Array, w: jax.Array, theta: jax.Array,
                           pixel_params=pixel_params, mtj_params=mtj_params,
                           block_n=block_n, interpret=interpret)
     return out[:n, :cout].reshape(b, ho, wo, cout)
+
+
+def _elem_block(n: int, block_n: int, block_n_elem: int) -> int:
+    """Largest kernel-B row block <= block_n_elem that tiles n exactly.
+
+    Kernel B is elementwise (no MXU tile), so it runs profitably with much
+    larger blocks than the matmul kernel; n is already a multiple of block_n.
+    """
+    blk = min(block_n_elem, n)
+    blk -= blk % block_n
+    while blk > block_n and n % blk:
+        blk -= block_n
+    return max(blk, block_n)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "stride",
+                                             "pixel_params", "mtj_params",
+                                             "interpret", "block_n",
+                                             "block_n_elem"))
+def p2m_frontend(images: jax.Array, w: jax.Array, v_th: jax.Array,
+                 key: jax.Array, *, kernel: int = 3, stride: int = 2,
+                 pixel_params: pixel_model.PixelCircuitParams =
+                 pixel_model.DEFAULT_PIXEL,
+                 mtj_params: mtj_model.MTJParams = mtj_model.DEFAULT_MTJ,
+                 interpret: bool = True, block_n: int = 128,
+                 block_n_elem: int = 1024):
+    """Single-pass P2M frontend step: the patch matmul happens exactly once.
+
+    images (B,H,W,C) in [0,1]; w (k,k,C,Cout) signed quantized weights;
+    v_th () the trainable threshold scale. Pipeline (DESIGN.md §5):
+
+        im2col -> kernel A (matmul once: u + Hoyer partials)
+               -> combine_hoyer_partials (theta, scalar)
+               -> kernel B (u -> voltage -> switching draw + V_CONV partials)
+
+    Returns ``(activations, aux)`` where activations is (B,H',W',Cout)
+    binary and aux carries ``theta`` plus the ``v_conv_mean/min/max`` stats —
+    every aux value comes out of the kernels' partial reductions, not a
+    shadow pure-JAX conv.
+    """
+    b, h, wd, c = images.shape
+    cout = w.shape[-1]
+    ho, wo = conv_out_hw(h, stride), conv_out_hw(wd, stride)
+    patches = im2col(images, kernel, stride)                 # (N, K)
+    wm = w.reshape(kernel * kernel * c, cout)
+    n = patches.shape[0]
+    bits = jax.random.bits(key, (n, cout), jnp.uint32)
+
+    # MXU alignment: pad K and C to 128 lanes, N to the block size
+    patches = _pad_to(patches, 1, 128)
+    wm = _pad_to(_pad_to(wm, 0, 128), 1, 128)
+    bits_p = _pad_to(bits, 1, 128)
+    n_pad = -n % block_n
+    if n_pad:
+        patches = jnp.pad(patches, ((0, n_pad), (0, 0)))
+        bits_p = jnp.pad(bits_p, ((0, n_pad), (0, 0)))
+
+    u, hoyer_partials = p2m_phase_a_pallas(
+        patches.astype(jnp.float32), wm.astype(jnp.float32),
+        v_th.reshape(1, 1).astype(jnp.float32),
+        pixel_params=pixel_params, block_n=block_n, interpret=interpret)
+    theta = combine_hoyer_partials(hoyer_partials, v_th.astype(jnp.float32))
+    out, v_partials = p2m_phase_b_pallas(
+        u, theta.reshape(1, 1), bits_p,
+        n_valid=n, c_valid=cout,
+        pixel_params=pixel_params, mtj_params=mtj_params,
+        block_n=_elem_block(u.shape[0], block_n, block_n_elem),
+        interpret=interpret)
+    aux = {"theta": theta,
+           **combine_v_conv_partials(v_partials, n, cout)}
+    return out[:n, :cout].reshape(b, ho, wo, cout), aux
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",

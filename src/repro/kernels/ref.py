@@ -51,6 +51,86 @@ def p2m_conv_ref(patches: jax.Array, w: jax.Array, theta: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# single-pass pipeline oracles: kernel A (matmul + Hoyer partials) and
+# kernel B (cached u -> voltage -> draw + masked V_CONV partials)
+# ---------------------------------------------------------------------------
+
+def _block_rows(x: jax.Array, block_n: int) -> jax.Array:
+    n = x.shape[0]
+    return x.reshape(n // block_n, block_n, *x.shape[1:])
+
+
+def p2m_phase_a_ref(patches: jax.Array, w: jax.Array, v_th: jax.Array, *,
+                    pixel_params: pixel_model.PixelCircuitParams =
+                    pixel_model.DEFAULT_PIXEL,
+                    block_n: int = 256):
+    """Oracle for kernel A: the single patch matmul.
+
+    Returns ``(u, hoyer_partials)`` exactly as ``p2m_phase_a_pallas`` does —
+    the pre-activation (N, C) plus per-block (sum |z_clip|, sum z_clip^2)
+    rows (N/block_n, STAT_LANES), reduced block-by-block in the same order so
+    interpret-mode parity is bit-exact.
+    """
+    from repro.core import hoyer
+    from repro.kernels import p2m_conv as k
+
+    mac_pos = jnp.dot(patches, jnp.maximum(w, 0.0),
+                      preferred_element_type=jnp.float32)
+    mac_neg = jnp.dot(patches, jnp.maximum(-w, 0.0),
+                      preferred_element_type=jnp.float32)
+    g = pixel_model.get_curve(pixel_params.curve, pixel_params)
+    u = g(mac_pos) - g(mac_neg)
+    zc = hoyer.clip01(u / jnp.maximum(v_th, 1e-6))
+    zb = _block_rows(zc, block_n)
+    lane = jnp.arange(k.STAT_LANES)
+    partials = (
+        jnp.where(lane == k.LANE_ABS,
+                  jnp.sum(jnp.abs(zb), axis=(1, 2))[:, None], 0.0)
+        + jnp.where(lane == k.LANE_SQ,
+                    jnp.sum(jnp.square(zb), axis=(1, 2))[:, None], 0.0))
+    return u, partials
+
+
+def p2m_phase_b_ref(u: jax.Array, theta: jax.Array, bits: jax.Array, *,
+                    n_valid: int, c_valid: int,
+                    pixel_params: pixel_model.PixelCircuitParams =
+                    pixel_model.DEFAULT_PIXEL,
+                    mtj_params: mtj_model.MTJParams = mtj_model.DEFAULT_MTJ,
+                    block_n: int = 1024):
+    """Oracle for kernel B: cached u through the device chain.
+
+    Returns ``(activations, v_conv_partials)`` as ``p2m_phase_b_pallas``
+    does: float {0,1} (N, C) plus per-block masked (sum, min, max) of the
+    subtractor voltage (N/block_n, STAT_LANES).
+    """
+    from repro.kernels import p2m_conv as k
+
+    v = pixel_model.conv_voltage(u, theta, pixel_params)
+    p_sw = mtj_model.switching_probability(
+        v, mtj_params.write_pulse_ps, mtj_params)
+    q = mtj_model.majority_prob_poly(
+        p_sw, mtj_params.n_redundant, mtj_params.majority)
+    draw = (bits.astype(jnp.float32) * (1.0 / 2 ** 32)) < q
+
+    n, c = u.shape
+    valid = ((jnp.arange(n)[:, None] < n_valid)
+             & (jnp.arange(c)[None, :] < c_valid))
+    vb = _block_rows(v, block_n)
+    mb = _block_rows(valid, block_n)
+    lane = jnp.arange(k.STAT_LANES)
+    partials = (
+        jnp.where(lane == k.LANE_VSUM,
+                  jnp.sum(jnp.where(mb, vb, 0.0), axis=(1, 2))[:, None], 0.0)
+        + jnp.where(lane == k.LANE_VMIN,
+                    jnp.min(jnp.where(mb, vb, jnp.inf),
+                            axis=(1, 2))[:, None], 0.0)
+        + jnp.where(lane == k.LANE_VMAX,
+                    jnp.max(jnp.where(mb, vb, -jnp.inf),
+                            axis=(1, 2))[:, None], 0.0))
+    return draw.astype(jnp.float32), partials
+
+
+# ---------------------------------------------------------------------------
 # flash attention oracle
 # ---------------------------------------------------------------------------
 

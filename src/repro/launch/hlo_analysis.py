@@ -69,6 +69,63 @@ def collective_stats(hlo_text: str) -> Dict[str, int]:
     return out
 
 
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def matmul_stats(hlo_text: str) -> Dict[str, float]:
+    """Static matmul/conv census of an HLO module.
+
+    Counts every ``dot`` and ``convolution`` op in the text and estimates
+    its flops (2 x output elements x contracted extent; convolutions use
+    2 x output x kernel-spatial x input-features, recovered from the operand
+    shapes). Ops inside loop bodies are counted ONCE — this is a *static*
+    census for asserting op-structure claims (e.g. "the frontend performs
+    the patch matmul exactly once": the single-pass pipeline must contain no
+    convolution ops and strictly fewer matmul flops than the double-conv
+    path), not a dynamic execution profile.
+    """
+    out = {"dot_count": 0, "dot_flops": 0.0,
+           "conv_count": 0, "conv_flops": 0.0}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        shapes = _SHAPE_RE.findall(stripped)
+        if " dot(" in stripped and len(shapes) >= 2:
+            # shapes[0] = output, shapes[1] = lhs
+            out_elems = 1
+            for d in shapes[0][1].split(","):
+                if d:
+                    out_elems *= int(d)
+            lhs_dims = [int(d) for d in shapes[1][1].split(",") if d]
+            m = _CONTRACT_RE.search(stripped)
+            contracted = 1
+            if m and m.group(1):
+                for i in m.group(1).split(","):
+                    contracted *= lhs_dims[int(i)]
+            out["dot_count"] += 1
+            out["dot_flops"] += 2.0 * out_elems * contracted
+        elif " convolution(" in stripped and len(shapes) >= 3:
+            out_elems = 1
+            for d in shapes[0][1].split(","):
+                if d:
+                    out_elems *= int(d)
+            # rhs (kernel) shape: contracted extent = all dims but the
+            # output-feature one, located via the dim_labels 'o' position
+            # (e.g. dim_labels=b01f_01io->b01f); fall back to the last dim
+            rhs_dims = [int(d) for d in shapes[2][1].split(",") if d]
+            m = re.search(r"dim_labels=[^_]+_([^-]+)->", stripped)
+            o_pos = m.group(1).index("o") if m else len(rhs_dims) - 1
+            contracted = 1
+            for i, d in enumerate(rhs_dims):
+                if i != o_pos:
+                    contracted *= d
+            out["conv_count"] += 1
+            out["conv_flops"] += 2.0 * out_elems * contracted
+    out["matmul_flops"] = out["dot_flops"] + out["conv_flops"]
+    return out
+
+
 def analytic_memory_bytes(cfg, shape, mesh_shape: Dict[str, int],
                           arg_bytes: float, out_bytes: float) -> float:
     """Fusion-aware HBM-traffic estimate per device per step.

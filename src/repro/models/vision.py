@@ -26,17 +26,20 @@ class VisionConfig:
     p2m: p2m.P2MConfig = p2m.P2MConfig()
     frontend_backend: str = "analog"     # default SensorFrontend backend
     frontend_interpret: bool = True      # False: compile the Pallas kernel (TPU)
-    frontend_block_n: int = 128          # Pallas patch-row block size
+    frontend_block_n: int = 512          # kernel-A patch-row (MXU) block size
+    frontend_block_n_elem: int = 4096    # kernel-B elementwise row-block cap
     weight_bits: int = 4
     remove_first_maxpool: bool = False   # paper's Model* variants
     hoyer_coeff: float = 1e-8
+    bn_momentum: float = 0.9             # EMA decay of the BN running stats
 
     @property
     def frontend(self) -> frontend.FrontendConfig:
         return frontend.FrontendConfig(p2m=self.p2m,
                                        backend=self.frontend_backend,
                                        interpret=self.frontend_interpret,
-                                       block_n=self.frontend_block_n)
+                                       block_n=self.frontend_block_n,
+                                       block_n_elem=self.frontend_block_n_elem)
 
 
 _VGG_PLANS = {
@@ -54,24 +57,62 @@ def _conv_spec(cin: int, cout: int, k: int = 3) -> Dict[str, Any]:
         "w": ParamSpec((k, k, cin, cout), (None, None, "channels", "channels")),
         "bn_scale": ParamSpec((cout,), ("channels",), init="ones"),
         "bn_bias": ParamSpec((cout,), ("channels",), init="zeros"),
+        # BN running stats (EMA; non-trainable — they never enter the loss
+        # with a gradient path, so SGD leaves them untouched and the train
+        # loop overwrites them from aux["bn_state"] after each step)
+        "bn_mean": ParamSpec((cout,), ("channels",), init="zeros"),
+        "bn_var": ParamSpec((cout,), ("channels",), init="ones"),
         "v_th": ParamSpec((), (), init="ones"),
     }
 
 
 def _conv_apply(params: Dict, x: jax.Array, stride: int, bits: int,
-                binary: bool = True) -> Tuple[jax.Array, jax.Array]:
+                binary: bool = True, train: bool = False,
+                bn_momentum: float = 0.9
+                ) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
+    """One quantized conv + BN + Hoyer-spike layer.
+
+    ``train=True`` normalizes with the live batch statistics and returns the
+    updated EMA running stats; ``train=False`` (eval/serving) consumes the
+    stored running stats AND computes the dynamic Hoyer spike threshold per
+    example (deployment semantics: each frame thresholds on its own
+    statistics), so a frame's prediction cannot depend on its batchmates
+    (the seed used live BN stats and a whole-batch spike threshold
+    unconditionally, which made ``VisionEngine`` outputs batch-composition
+    dependent).
+    """
     w = p2m.quantize_weights(params["w"], bits)
     y = jax.lax.conv_general_dilated(
         x, w, (stride, stride), "SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    mu = jnp.mean(y, axis=(0, 1, 2), keepdims=True)
-    var = jnp.var(y, axis=(0, 1, 2), keepdims=True)
+    new_stats: Optional[Dict] = None
+    if train:
+        mu = jnp.mean(y, axis=(0, 1, 2))
+        var = jnp.var(y, axis=(0, 1, 2))
+        m = bn_momentum
+        new_stats = {
+            "bn_mean": jax.lax.stop_gradient(
+                m * params["bn_mean"] + (1.0 - m) * mu),
+            "bn_var": jax.lax.stop_gradient(
+                m * params["bn_var"] + (1.0 - m) * var),
+        }
+    else:
+        mu, var = params["bn_mean"], params["bn_var"]
     y = (y - mu) / jnp.sqrt(var + 1e-5)
     y = y * params["bn_scale"] + params["bn_bias"]
     if not binary:
-        return jax.nn.relu(y), jnp.zeros(())
-    o, hl = hoyer.hoyer_spike(y, params["v_th"])
-    return o, hl
+        return jax.nn.relu(y), jnp.zeros(()), new_stats
+    if train:
+        o, hl = hoyer.hoyer_spike(y, params["v_th"])
+        return o, hl, new_stats
+    # eval: per-example dynamic threshold (batch-independent predictions);
+    # no gradients needed, so the spike is a plain comparison
+    z = y / jnp.maximum(params["v_th"], 1e-6)
+    zc = hoyer.clip01(z)
+    thr = hoyer.hoyer_extremum(zc, axis=tuple(range(1, z.ndim)),
+                               keepdims=True)
+    o = (z >= thr).astype(y.dtype)
+    return o, hoyer.hoyer_regularizer(zc), new_stats
 
 
 def _maxpool(x: jax.Array) -> jax.Array:
@@ -123,20 +164,32 @@ def init_params(key: jax.Array, cfg: VisionConfig):
 
 
 def forward(params: Dict, images: jax.Array, cfg: VisionConfig, *,
-            key: Optional[jax.Array] = None, backend: Optional[str] = None
-            ) -> Tuple[jax.Array, jax.Array, Dict]:
+            key: Optional[jax.Array] = None, backend: Optional[str] = None,
+            train: bool = False) -> Tuple[jax.Array, jax.Array, Dict]:
     """images: (B, H, W, C) in [0, 1]. Returns (logits, hoyer_loss, aux).
 
     The first layer goes through the SensorFrontend; ``backend`` overrides
     ``cfg.frontend_backend`` per call (e.g. train with "analog", eval with
     "device" or "pallas"). ``key`` feeds whichever backend is stochastic —
     including the Fig. 8 noise injection of the analog path.
+
+    ``train=True`` switches BatchNorm to live batch statistics and returns
+    the updated EMA running stats as ``aux["bn_state"]`` (a sub-tree of
+    ``params["layers"]`` — apply with ``apply_bn_state`` after the gradient
+    step). Eval (the default) consumes the stored running stats, so a
+    frame's backbone prediction is independent of its batchmates.
     """
     fe = frontend.SensorFrontend(cfg.frontend)
     x, fe_aux = fe(params["p2m"], images, key=key, mode=backend)
     # raw hoyer term; cfg.hoyer_coeff is applied exactly once, at the end
     hoyer_total = fe_aux["hoyer_loss"]
     p2m_sparsity = fe_aux["sparsity"]
+    bn_state: Dict = {}
+
+    def conv(layer_params, x, stride, binary=True):
+        return _conv_apply(layer_params, x, stride, cfg.weight_bits,
+                           binary=binary, train=train,
+                           bn_momentum=cfg.bn_momentum)
 
     if cfg.arch.startswith("vgg"):
         i = 0
@@ -150,8 +203,9 @@ def forward(params: Dict, images: jax.Array, cfg: VisionConfig, *,
                 if x.shape[1] > 1:
                     x = _maxpool(x)
                 continue
-            x, hl = _conv_apply(params["layers"][f"conv{i}"], x, 1,
-                                cfg.weight_bits)
+            x, hl, st = conv(params["layers"][f"conv{i}"], x, 1)
+            if train:
+                bn_state[f"conv{i}"] = st
             hoyer_total += hl
             i += 1
     else:
@@ -159,12 +213,15 @@ def forward(params: Dict, images: jax.Array, cfg: VisionConfig, *,
         for name in names:
             blk = params["layers"][name]
             stride = 1
-            h, hl1 = _conv_apply(blk["c1"], x, stride, cfg.weight_bits)
-            h, hl2 = _conv_apply(blk["c2"], h, 1, cfg.weight_bits)
+            h, hl1, st1 = conv(blk["c1"], x, stride)
+            h, hl2, st2 = conv(blk["c2"], h, 1)
             sc = x
+            blk_state = {"c1": st1, "c2": st2}
             if "proj" in blk:
-                sc, _ = _conv_apply(blk["proj"], x, stride, cfg.weight_bits,
-                                    binary=False)
+                sc, _, stp = conv(blk["proj"], x, stride, binary=False)
+                blk_state["proj"] = stp
+            if train:
+                bn_state[name] = blk_state
             x = h + sc
             hoyer_total += hl1 + hl2
 
@@ -175,13 +232,32 @@ def forward(params: Dict, images: jax.Array, cfg: VisionConfig, *,
     aux = {"p2m_sparsity": p2m_sparsity,
            **{k: v for k, v in fe_aux.items()
               if k not in ("hoyer_loss", "sparsity")}}
+    if train:
+        aux["bn_state"] = bn_state
     return logits, cfg.hoyer_coeff * hoyer_total, aux
 
 
-def loss_fn(params, batch, cfg: VisionConfig, key=None):
+def apply_bn_state(params: Dict, bn_state: Optional[Dict]) -> Dict:
+    """Merge ``aux["bn_state"]`` (EMA running stats from a ``train=True``
+    forward) back into the parameter tree. Pure — returns a new tree."""
+    if not bn_state:
+        return params
+
+    def merge(p, s):
+        if not isinstance(s, dict):
+            return s
+        return {k: merge(p[k], s[k]) if k in s else p[k] for k in p}
+
+    return {**params, "layers": merge(params["layers"], bn_state)}
+
+
+def loss_fn(params, batch, cfg: VisionConfig, key=None, train: bool = True):
     # key reaches the frontend: this is what activates the Fig. 8
-    # stochastic-switching noise-injection study during training
-    logits, hloss, aux = forward(params, batch["image"], cfg, key=key)
+    # stochastic-switching noise-injection study during training.
+    # train=True (the default — this is the TRAINING loss) uses live BN
+    # stats and surfaces the EMA update in aux["bn_state"].
+    logits, hloss, aux = forward(params, batch["image"], cfg, key=key,
+                                 train=train)
     logp = jax.nn.log_softmax(logits)
     nll = -jnp.mean(jnp.take_along_axis(logp, batch["label"][:, None], 1))
     acc = jnp.mean((jnp.argmax(logits, -1) == batch["label"]).astype(jnp.float32))

@@ -11,31 +11,59 @@ whole step is jit-compiled once per (batch shape, backend).
     for out in engine.stream(frame_batches):            # a frame stream
         ...
 
+Data parallelism: pass ``mesh=`` (e.g. ``launch.mesh.make_host_mesh()`` or
+the 16x16 production mesh) and the engine becomes a data-parallel server —
+params are replicated across the mesh once at construction and every frame
+batch is sharded over the mesh's batch axes (``("pod", "data")`` per the
+``sharding.py`` rule table) before the jitted step, so XLA SPMD-partitions
+the whole sensor-to-logits pipeline. The computation is deterministic in the
+key regardless of the device layout, so a sharded engine is bit-identical to
+a single-device one (asserted in tests/test_serving_sharded.py).
+
+Microbatching: ``microbatch=`` caps the per-step frame count; ``stream()``
+splits larger incoming batches and folds a fresh key per microbatch (each
+microbatch is one global-shutter exposure draw), then merges the outputs
+back into one result per incoming batch.
+
 ``out`` is a dict with ``labels``, ``probs``, and the frontend aux
-(sparsity, V_CONV stats, global-shutter energy accounting) so a deployment
-can monitor the sensor link, not just the predictions.
+(sparsity, V_CONV stats, per-frame global-shutter energy accounting) so a
+deployment can monitor the sensor link, not just the predictions.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Iterable, Iterator, Optional
+from typing import Dict, Iterable, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import sharding
 from repro.models import vision
+
+# logical axes of a (B, H, W, C) frame batch: shard batch, replicate pixels
+FRAME_AXES = ("batch", None, None, None)
 
 
 class VisionEngine:
-    """Synchronous batched frame-classification engine."""
+    """Synchronous batched frame-classification engine (optionally sharded)."""
 
     def __init__(self, cfg: vision.VisionConfig, params,
-                 backend: Optional[str] = None, seed: int = 0):
+                 backend: Optional[str] = None, seed: int = 0,
+                 mesh: Optional[Mesh] = None,
+                 rules: Optional[sharding.ShardingRules] = None,
+                 microbatch: Optional[int] = None):
         self.cfg = cfg
-        self.params = params
         self.backend = backend or cfg.frontend_backend
+        self.mesh = mesh
+        self.rules = rules or sharding.ShardingRules.make()
+        self.microbatch = microbatch
         self._key = jax.random.PRNGKey(seed)
         self._frame_count = 0
+        if mesh is not None:
+            # model + frontend params are small — replicate once, serve many
+            params = jax.device_put(params, NamedSharding(mesh, P()))
+        self.params = params
         self._step = jax.jit(functools.partial(self._forward, cfg=cfg,
                                                backend=self.backend))
 
@@ -46,17 +74,70 @@ class VisionEngine:
         probs = jax.nn.softmax(logits, axis=-1)
         return {"labels": jnp.argmax(logits, -1), "probs": probs, **aux}
 
+    def _shard_frames(self, frames: jax.Array) -> jax.Array:
+        """Lay the frame batch out over the mesh's batch axes (no-op when
+        the engine is unsharded or the batch does not divide the axes)."""
+        if self.mesh is None:
+            return frames
+        spec = sharding.logical_to_spec(FRAME_AXES, frames.shape, self.mesh,
+                                        self.rules)
+        return jax.device_put(frames, NamedSharding(self.mesh, spec))
+
     def classify(self, frames: jax.Array,
                  key: Optional[jax.Array] = None) -> Dict:
-        """frames: (B, H, W, C) in [0, 1]. Returns labels/probs/frontend aux."""
+        """frames: (B, H, W, C) in [0, 1]. Returns labels/probs/frontend aux.
+
+        Without an explicit ``key`` the engine folds its frame counter into
+        the seed key and advances it. An explicit ``key`` (replaying a frame,
+        A/B-ing a draw) does NOT advance the counter, so replays leave the
+        rng sequence of subsequent auto-keyed frames untouched.
+        """
         if key is None:
             key = jax.random.fold_in(self._key, self._frame_count)
-        self._frame_count += 1
-        return self._step(self.params, frames, key)
+            self._frame_count += 1
+        return self._step(self.params, self._shard_frames(frames), key)
 
     def stream(self, frame_batches: Iterable[jax.Array]) -> Iterator[Dict]:
-        """Classify a stream of frame batches; per-frame rng is folded in so
-        the stochastic MTJ draws differ frame to frame (global shutter:
-        every frame is one exposure + burst read)."""
+        """Classify a stream of frame batches; per-batch (and, with
+        ``microbatch=``, per-microbatch) rng keys are folded in so the
+        stochastic MTJ draws differ exposure to exposure (global shutter:
+        every frame is one exposure + burst read). Yields one merged output
+        per incoming batch regardless of microbatching."""
         for frames in frame_batches:
-            yield self.classify(frames)
+            mb = self.microbatch
+            if not mb or frames.shape[0] <= mb:
+                yield self.classify(frames)
+                continue
+            base = jax.random.fold_in(self._key, self._frame_count)
+            self._frame_count += 1
+            starts = list(range(0, frames.shape[0], mb))
+            outs = [self.classify(frames[i:i + mb],
+                                  key=jax.random.fold_in(base, j))
+                    for j, i in enumerate(starts)]
+            sizes = [min(mb, frames.shape[0] - i) for i in starts]
+            yield _merge_outputs(outs, sizes)
+
+
+def _merge_outputs(outs: List[Dict], sizes: List[int]) -> Dict:
+    """Merge per-microbatch outputs into one batch-level dict.
+
+    Per-example arrays (leading dim = microbatch size) are concatenated;
+    scalar monitoring stats are reduced respecting their semantics:
+    min/max keys by min/max, everything else — means and per-frame energies
+    — by a frame-count-WEIGHTED mean (the tail microbatch of a batch that
+    does not divide evenly must not be over-weighted).
+    """
+    w = jnp.asarray(sizes, jnp.float32)
+    w = w / jnp.sum(w)
+    merged: Dict = {}
+    for k in outs[0]:
+        vals = [o[k] for o in outs]
+        if getattr(vals[0], "ndim", 0) >= 1:
+            merged[k] = jnp.concatenate(vals, axis=0)
+        elif k.endswith("_min"):
+            merged[k] = jnp.min(jnp.stack(vals))
+        elif k.endswith("_max"):
+            merged[k] = jnp.max(jnp.stack(vals))
+        else:
+            merged[k] = jnp.sum(jnp.stack(vals) * w)
+    return merged

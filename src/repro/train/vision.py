@@ -31,7 +31,11 @@ def fit(params, cfg: vision.VisionConfig, stream, steps: int,
     def step(p, batch, k):
         (l, aux), g = jax.value_and_grad(
             lambda p_: vision.loss_fn(p_, batch, cfg, k), has_aux=True)(p)
-        return jax.tree.map(lambda w, gw: w - lr * gw, p, g), l, aux
+        p = jax.tree.map(lambda w, gw: w - lr * gw, p, g)
+        # BN running stats are EMA state, not gradient-trained: fold the
+        # stats returned by the train-mode forward back into the tree
+        p = vision.apply_bn_state(p, aux.pop("bn_state", None))
+        return p, l, aux
 
     for i in range(steps):
         params, l, aux = step(params, stream.next_batch(),

@@ -3,12 +3,26 @@
 Lets ``python -m pytest`` work without the ``PYTHONPATH=src`` env var (the
 tier-1 command still sets it; scripts/ci.sh uses it) and lets test modules
 import the ``hypothesis_shim`` helper.
+
+Also splits the host CPU into two XLA devices (before any jax import) so
+the data-parallel serving tests exercise REAL sharding — a 1-device mesh
+would make the sharded-vs-single-device equivalence test vacuous. A
+caller-provided XLA_FLAGS is preserved (the device-count flag is appended
+unless the caller already forces one).
 """
 import os
 import sys
 
+_FLAGS = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _FLAGS:
+    os.environ["XLA_FLAGS"] = (
+        _FLAGS + " --xla_force_host_platform_device_count=2").strip()
+
 _HERE = os.path.dirname(os.path.abspath(__file__))
-_SRC = os.path.join(os.path.dirname(_HERE), "src")
-for path in (_HERE, _SRC):
+_ROOT = os.path.dirname(_HERE)
+_SRC = os.path.join(_ROOT, "src")
+# repo root makes ``benchmarks`` importable (tests share its helpers,
+# e.g. the reconstructed pre-fix double-conv baseline)
+for path in (_HERE, _SRC, _ROOT):
     if path not in sys.path:
         sys.path.insert(0, path)

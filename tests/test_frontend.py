@@ -40,8 +40,8 @@ class TestAPI:
         acts, aux = fe(params, frame, key=jax.random.PRNGKey(2), mode=mode)
         assert acts.shape == (2, 16, 16, 32)
         assert set(np.unique(np.asarray(acts)).tolist()) <= {0.0, 1.0}
-        for k in ("hoyer_loss", "sparsity", "v_conv_mean", "v_conv_min",
-                  "v_conv_max"):
+        for k in ("hoyer_loss", "sparsity", "theta", "v_conv_mean",
+                  "v_conv_min", "v_conv_max"):
             assert k in aux, f"{mode} missing {k}"
         assert 0.0 <= float(aux["sparsity"]) <= 1.0
 
@@ -62,21 +62,26 @@ class TestCrossBackendParity:
     def test_pallas_interpret_bit_exact_vs_core_reference(self):
         """Acceptance: pallas(interpret) == the core device reference
         (kernels/ref.py, built purely from core/pixel + core/mtj) bit-exactly
-        on the same random bits."""
+        on the same random bits. theta comes from the kernel-A partial
+        reductions (aux) — and must agree with the pure-JAX shadow-conv
+        theta the old backend computed, up to fp reduction order."""
         params, frame = _setup(seed=3)
         key = jax.random.PRNGKey(7)
         fe = frontend.SensorFrontend(frontend.FrontendConfig(
             p2m=CFG, global_shutter=False))
-        acts, _ = fe(params, frame, key=key, mode="pallas")
+        acts, aux = fe(params, frame, key=key, mode="pallas")
 
         u = p2m.hardware_conv(frame, params["w"], CFG)
-        theta = hoyer.effective_threshold(u, params["v_th"]) * params["v_th"]
+        theta_shadow = (hoyer.effective_threshold(u, params["v_th"])
+                        * params["v_th"])
+        np.testing.assert_allclose(float(aux["theta"]), float(theta_shadow),
+                                   rtol=1e-5)
         wq = p2m.quantize_weights(params["w"], CFG.weight_bits)
         patches = ops.im2col(frame, CFG.kernel_size, CFG.stride)
         bits = jax.random.bits(key, (patches.shape[0], CFG.out_channels),
                                jnp.uint32)
         expected = ref.p2m_conv_ref(
-            patches, wq.reshape(-1, CFG.out_channels), theta, bits,
+            patches, wq.reshape(-1, CFG.out_channels), aux["theta"], bits,
             pixel_params=CFG.pixel, mtj_params=CFG.mtj)
         np.testing.assert_array_equal(
             np.asarray(acts.reshape(-1, CFG.out_channels)),
@@ -93,16 +98,19 @@ class TestCrossBackendParity:
         key = jax.random.PRNGKey(11)
         fe = frontend.SensorFrontend(frontend.FrontendConfig(
             p2m=pcfg, global_shutter=False))
-        acts, _ = fe(params, frame, key=key, mode="pallas")
+        acts, aux = fe(params, frame, key=key, mode="pallas")
 
         u = p2m.hardware_conv(frame, params["w"], pcfg)
-        theta = hoyer.effective_threshold(u, params["v_th"]) * params["v_th"]
+        theta_shadow = (hoyer.effective_threshold(u, params["v_th"])
+                        * params["v_th"])
+        np.testing.assert_allclose(float(aux["theta"]), float(theta_shadow),
+                                   rtol=1e-5)
         wq = p2m.quantize_weights(params["w"], pcfg.weight_bits)
         patches = ops.im2col(frame, pcfg.kernel_size, pcfg.stride)
         bits = jax.random.bits(key, (patches.shape[0], pcfg.out_channels),
                                jnp.uint32)
         expected = ref.p2m_conv_ref(
-            patches, wq.reshape(-1, pcfg.out_channels), theta, bits,
+            patches, wq.reshape(-1, pcfg.out_channels), aux["theta"], bits,
             pixel_params=pcfg.pixel, mtj_params=pcfg.mtj)
         np.testing.assert_array_equal(
             np.asarray(acts.reshape(-1, pcfg.out_channels)),
@@ -209,11 +217,14 @@ class TestGlobalShutter:
             np.testing.assert_allclose(
                 float(aux["activated_fraction"]), float(jnp.mean(acts)),
                 rtol=1e-6)
-            # neuron-level reset estimate: activated neurons x n_redundant
+            # PER-FRAME neuron-level reset estimate: activated neurons x
+            # n_redundant, averaged over the batch of exposures
             # (sub-majority partial switches are not tracked post-fold —
             # see frontend/shutter.py docstring)
-            expected = float(jnp.sum(acts)) * CFG.mtj.n_redundant
-            np.testing.assert_allclose(float(aux["reset_pulses"]), expected)
+            b = acts.shape[0]
+            expected = float(jnp.sum(acts)) / b * CFG.mtj.n_redundant
+            np.testing.assert_allclose(float(aux["reset_pulses"]), expected,
+                                       rtol=1e-6)
 
     def test_readout_stats_values(self):
         states = jnp.zeros((4, 4)).at[0, :2].set(1.0)
@@ -222,6 +233,17 @@ class TestGlobalShutter:
         assert float(stats["activated_fraction"]) == pytest.approx(2 / 16)
         assert float(stats["reset_pulses"]) == 2 * 8
         assert float(stats["read_energy_pj"]) == pytest.approx(16 * 8 * 0.05)
+
+    def test_readout_stats_per_frame_normalization(self):
+        """A batch of identical frames reports the same per-frame stats as
+        one frame (the seed summed the whole batch under per-frame names)."""
+        one = jax.random.bernoulli(
+            jax.random.PRNGKey(2), 0.4, (8, 8, 16)).astype(jnp.float32)
+        batch = jnp.stack([one] * 3)
+        _, s1 = frontend.global_shutter_readout(one)
+        _, sb = frontend.global_shutter_readout(batch, frames=3)
+        for k in s1:
+            np.testing.assert_allclose(float(sb[k]), float(s1[k]), rtol=1e-6)
 
 
 class TestVisionIntegrationFixes:

@@ -1,0 +1,219 @@
+"""Single-pass pipeline tests (DESIGN.md §5): the pallas frontend performs
+the patch matmul exactly once, kernels A+B match their pure-jnp oracles
+(including non-default device params), and im2col matches SAME convolution.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.frontend_bench import legacy_double_conv_step
+
+from repro import frontend
+from repro.core import hoyer, mtj, p2m, pixel
+from repro.frontend.backends import _v_conv_stats
+from repro.kernels import ops, ref
+from repro.kernels import p2m_conv as pk
+from repro.launch import hlo_analysis
+
+CFG = p2m.P2MConfig()
+
+
+def _setup(seed=0, b=2, hw=32, cfg=CFG):
+    params = p2m.init_params(jax.random.PRNGKey(seed), cfg)
+    frame = jax.random.uniform(jax.random.PRNGKey(seed + 1), (b, hw, hw, 3))
+    return params, frame
+
+
+class TestSinglePassGuarantee:
+    def test_hlo_matmul_census_exactly_one_conv_pass(self):
+        """Acceptance: the jitted pallas frontend step performs the patch
+        matmul once. With identical kernel tiling, the single-pass HLO holds
+        the two integration-phase dots and ZERO convolution ops; the pre-fix
+        path holds the SAME two dots PLUS two convolutions (the shadow
+        pure-JAX ``hardware_conv`` pass) — i.e. it computes the first-layer
+        conv twice, and the removed work is exactly one full conv pass."""
+        fe_cfg = frontend.FrontendConfig(p2m=CFG, global_shutter=False)
+        fe = frontend.SensorFrontend(fe_cfg)
+        params, frame = _setup(seed=0, b=2)
+        b, hw = 2, 32
+        key = jax.random.PRNGKey(1)
+
+        new_hlo = (jax.jit(lambda p, x, k: fe(p, x, key=k, mode="pallas")[0])
+                   .lower(params, frame, key).compile().as_text())
+        # identical matmul tile => the dot census is directly comparable;
+        # the baseline is the SAME reconstruction the benchmark measures
+        old_hlo = (jax.jit(legacy_double_conv_step(fe_cfg,
+                                                   block_n=fe_cfg.block_n))
+                   .lower(params, frame, key).compile().as_text())
+        new = hlo_analysis.matmul_stats(new_hlo)
+        old = hlo_analysis.matmul_stats(old_hlo)
+
+        assert new["conv_count"] == 0, "single-pass path must not conv again"
+        assert new["dot_count"] == 2      # pos + neg integration phase
+        assert old["conv_count"] == 2     # the shadow hardware_conv pass
+        assert old["dot_count"] == 2
+        assert new["matmul_flops"] == new["dot_flops"]
+        # the kernel matmul itself is unchanged...
+        assert new["dot_flops"] == old["dot_flops"]
+        # ...and the double-conv path duplicates exactly one SAME conv:
+        # 2 phase convs of 2 * (B*H'*W'*Cout) * k*k*Cin flops each
+        ho = ops.conv_out_hw(hw, CFG.stride)
+        one_conv = 2.0 * (b * ho * ho * CFG.out_channels) * 9 * 3
+        assert old["conv_flops"] == 2 * one_conv
+        assert old["matmul_flops"] == new["matmul_flops"] + 2 * one_conv
+
+    def test_matmul_stats_parses_known_hlo(self):
+        hlo = """
+  %d = f32[256,128]{1,0} dot(f32[256,64]{1,0} %a, f32[64,128]{1,0} %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %c = f32[2,16,16,32]{3,2,1,0} convolution(f32[2,32,32,3]{3,2,1,0} %x, f32[3,3,3,32]{3,2,1,0} %w), window={size=3x3 stride=2x2}, dim_labels=b01f_01io->b01f
+"""
+        st = hlo_analysis.matmul_stats(hlo)
+        assert st["dot_count"] == 1 and st["conv_count"] == 1
+        assert st["dot_flops"] == 2 * 256 * 128 * 64
+        assert st["conv_flops"] == 2 * (2 * 16 * 16 * 32) * 27
+
+
+@pytest.mark.parametrize("pcfg", [
+    CFG,
+    dataclasses.replace(
+        CFG,
+        pixel=dataclasses.replace(CFG.pixel, saturation=1.2, v_sw=0.75),
+        mtj=dataclasses.replace(CFG.mtj, n_redundant=4)),
+], ids=["default", "nondefault"])
+class TestKernelParity:
+    def _padded(self, pcfg, seed=0, b=2, hw=16):
+        params, frame = _setup(seed=seed, b=b, hw=hw, cfg=pcfg)
+        wq = p2m.quantize_weights(params["w"], pcfg.weight_bits)
+        patches = ops._pad_to(
+            ops.im2col(frame, pcfg.kernel_size, pcfg.stride), 1, 128)
+        wm = ops._pad_to(
+            ops._pad_to(wq.reshape(-1, pcfg.out_channels), 0, 128), 1, 128)
+        return params, frame, patches.astype(jnp.float32), \
+            wm.astype(jnp.float32)
+
+    def test_phase_a_matches_ref(self, pcfg):
+        params, _, patches, wm = self._padded(pcfg)
+        v_th = params["v_th"]
+        uk, hk = pk.p2m_phase_a_pallas(patches, wm, v_th.reshape(1, 1),
+                                       pixel_params=pcfg.pixel, block_n=128)
+        ur, hr = ref.p2m_phase_a_ref(patches, wm, v_th,
+                                     pixel_params=pcfg.pixel, block_n=128)
+        # interpret-mode dot may differ from the pure dot by an ulp
+        np.testing.assert_allclose(np.asarray(uk), np.asarray(ur), atol=3e-6)
+        np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), rtol=1e-5)
+        # zero-padding must be invisible to the Hoyer partials
+        n_real = 2 * 8 * 8
+        assert float(jnp.sum(jnp.abs(uk[n_real:]))) == 0.0
+
+    def test_phase_b_bit_exact_on_same_u(self, pcfg):
+        """Feeding kernel B and its oracle the SAME cached u, the binary
+        draws are bit-exact and the masked V_CONV partials agree."""
+        params, _, patches, wm = self._padded(pcfg, seed=5)
+        u, hk = pk.p2m_phase_a_pallas(patches, wm,
+                                      params["v_th"].reshape(1, 1),
+                                      pixel_params=pcfg.pixel, block_n=128)
+        theta = pk.combine_hoyer_partials(hk, params["v_th"])
+        n, c = u.shape
+        n_real, c_real = 2 * 8 * 8, pcfg.out_channels
+        bits = jax.random.bits(jax.random.PRNGKey(3), (n, c), jnp.uint32)
+        ak, vk = pk.p2m_phase_b_pallas(u, theta.reshape(1, 1), bits,
+                                       n_valid=n_real, c_valid=c_real,
+                                       pixel_params=pcfg.pixel,
+                                       mtj_params=pcfg.mtj, block_n=128)
+        ar, vr = ref.p2m_phase_b_ref(u, theta, bits,
+                                     n_valid=n_real, c_valid=c_real,
+                                     pixel_params=pcfg.pixel,
+                                     mtj_params=pcfg.mtj, block_n=128)
+        np.testing.assert_array_equal(np.asarray(ak), np.asarray(ar))
+        np.testing.assert_allclose(np.asarray(vk), np.asarray(vr), rtol=1e-6)
+
+    def test_full_pipeline_bit_exact_vs_fused_oracle(self, pcfg):
+        """kernel A + combine + kernel B == ref.p2m_conv_ref at the pipeline
+        theta, bit-exactly, through the public SensorFrontend surface."""
+        params, frame = _setup(seed=7, b=2, hw=16, cfg=pcfg)
+        key = jax.random.PRNGKey(9)
+        fe = frontend.SensorFrontend(frontend.FrontendConfig(
+            p2m=pcfg, global_shutter=False))
+        acts, aux = fe(params, frame, key=key, mode="pallas")
+        wq = p2m.quantize_weights(params["w"], pcfg.weight_bits)
+        patches = ops.im2col(frame, pcfg.kernel_size, pcfg.stride)
+        bits = jax.random.bits(key, (patches.shape[0], pcfg.out_channels),
+                               jnp.uint32)
+        expected = ref.p2m_conv_ref(
+            patches, wq.reshape(-1, pcfg.out_channels), aux["theta"], bits,
+            pixel_params=pcfg.pixel, mtj_params=pcfg.mtj)
+        np.testing.assert_array_equal(
+            np.asarray(acts.reshape(-1, pcfg.out_channels)),
+            np.asarray(expected))
+
+    def test_aux_stats_match_shadow_conv_values(self, pcfg):
+        """The kernel-emitted theta and v_conv stats reproduce what the
+        deleted shadow pure-JAX pass used to compute."""
+        params, frame = _setup(seed=11, b=2, hw=16, cfg=pcfg)
+        fe = frontend.SensorFrontend(frontend.FrontendConfig(
+            p2m=pcfg, global_shutter=False))
+        _, aux = fe(params, frame, key=jax.random.PRNGKey(0), mode="pallas")
+        u = p2m.hardware_conv(frame, params["w"], pcfg)
+        theta = hoyer.effective_threshold(u, params["v_th"]) * params["v_th"]
+        np.testing.assert_allclose(float(aux["theta"]), float(theta),
+                                   rtol=1e-5)
+        shadow = _v_conv_stats(u, theta, pcfg.pixel)
+        for k, v in shadow.items():
+            np.testing.assert_allclose(float(aux[k]), float(v), rtol=1e-4,
+                                       err_msg=k)
+
+
+class TestBlockSizing:
+    def test_elem_block_divides_and_caps(self):
+        assert ops._elem_block(4096, 128, 1024) == 1024
+        assert ops._elem_block(512, 512, 4096) == 512
+        assert ops._elem_block(384, 128, 1024) == 384
+        # falls back toward the matmul block when nothing larger divides
+        assert ops._elem_block(640, 128, 512) == 128
+        for n, bn, be in ((4096, 128, 4096), (1024, 256, 4096),
+                          (640, 128, 512)):
+            blk = ops._elem_block(n, bn, be)
+            assert n % blk == 0 and blk % bn == 0 and blk <= max(be, bn)
+
+    def test_pipeline_invariant_to_block_sizes(self):
+        """Same key => same activations for any (block_n, block_n_elem)."""
+        params, frame = _setup(seed=13, b=2, hw=16)
+        key = jax.random.PRNGKey(4)
+        wq = p2m.quantize_weights(params["w"], CFG.weight_bits)
+        outs = []
+        for bn, be in ((128, 128), (128, 512), (256, 512)):
+            o, aux = ops.p2m_frontend(frame, wq, params["v_th"], key,
+                                      block_n=bn, block_n_elem=be)
+            outs.append((np.asarray(o), float(aux["theta"])))
+        for (o, th) in outs[1:]:
+            np.testing.assert_array_equal(o, outs[0][0])
+            np.testing.assert_allclose(th, outs[0][1], rtol=1e-6)
+
+
+class TestIm2colSAME:
+    @pytest.mark.parametrize("kernel,stride,hw", [
+        (3, 1, 16), (3, 2, 16), (5, 1, 12), (5, 2, 12), (3, 2, 15)])
+    def test_matches_lax_conv_same(self, kernel, stride, hw):
+        """Regression: im2col patch matmul == SAME conv_general_dilated
+        (the seed's symmetric padding was off by one pixel for strided
+        even-size inputs, misaligning pallas vs hardware_conv)."""
+        x = jax.random.uniform(jax.random.PRNGKey(0), (2, hw, hw, 3))
+        w = jax.random.normal(jax.random.PRNGKey(1), (kernel, kernel, 3, 8))
+        got = (ops.im2col(x, kernel, stride) @ w.reshape(-1, 8))
+        want = jax.lax.conv_general_dilated(
+            x, w, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        ho = ops.conv_out_hw(hw, stride)
+        assert want.shape == (2, ho, ho, 8)
+        np.testing.assert_allclose(np.asarray(got.reshape(want.shape)),
+                                   np.asarray(want), atol=1e-5)
+
+    def test_even_kernel_raises(self):
+        x = jnp.zeros((1, 8, 8, 3))
+        with pytest.raises(ValueError, match="odd kernel"):
+            ops.im2col(x, 4, 2)
+        with pytest.raises(ValueError, match="odd kernel"):
+            ops.im2col(x, 2, 1)

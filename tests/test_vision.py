@@ -47,13 +47,88 @@ def test_training_reduces_loss():
     def step(p, batch):
         (l, aux), g = jax.value_and_grad(
             lambda p_: vision.loss_fn(p_, batch, cfg), has_aux=True)(p)
-        return jax.tree.map(lambda w, gw: w - 3e-3 * gw, p, g), l
+        p = jax.tree.map(lambda w, gw: w - 1e-2 * gw, p, g)
+        # fold the train-mode BN EMA stats back in (running stats are
+        # consumed by eval-mode forwards, not learned by SGD)
+        return vision.apply_bn_state(p, aux.pop("bn_state", None)), l
 
     losses = []
     for _ in range(30):
         params, l = step(params, stream.next_batch())
         losses.append(float(l))
     assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+class TestBatchNormEMA:
+    """Regression: eval-time BN used live batch statistics unconditionally,
+    so a frame's prediction depended on its batchmates."""
+
+    def _layer(self, cout=8, seed=0):
+        spec = vision._conv_spec(3, cout)
+        from repro.models.params import init_tree
+        return init_tree(jax.random.PRNGKey(seed), spec, jnp.float32)
+
+    def test_eval_output_independent_of_batchmates(self):
+        p = self._layer()
+        x0 = jax.random.uniform(jax.random.PRNGKey(1), (1, 8, 8, 3))
+        mates_a = jax.random.uniform(jax.random.PRNGKey(2), (3, 8, 8, 3))
+        mates_b = jax.random.normal(jax.random.PRNGKey(3), (3, 8, 8, 3)) * 5
+        oa, _, _ = vision._conv_apply(p, jnp.concatenate([x0, mates_a]), 1, 4)
+        ob, _, _ = vision._conv_apply(p, jnp.concatenate([x0, mates_b]), 1, 4)
+        np.testing.assert_array_equal(np.asarray(oa[0]), np.asarray(ob[0]))
+
+    def test_train_mode_still_uses_batch_stats(self):
+        p = self._layer()
+        xa = jax.random.uniform(jax.random.PRNGKey(1), (4, 8, 8, 3))
+        xb = jnp.concatenate([xa[:1], xa[1:] * 3.0])
+        oa, _, sa = vision._conv_apply(p, xa, 1, 4, train=True)
+        ob, _, sb = vision._conv_apply(p, xb, 1, 4, train=True)
+        assert sa is not None and "bn_mean" in sa and "bn_var" in sa
+        # live stats => first example's output shifts with its batchmates
+        assert not np.array_equal(np.asarray(oa[0]), np.asarray(ob[0]))
+
+    def test_ema_update_math(self):
+        p = self._layer()
+        x = jax.random.uniform(jax.random.PRNGKey(1), (4, 8, 8, 3))
+        w = vision.p2m.quantize_weights(p["w"], 4)
+        y = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        mu = jnp.mean(y, axis=(0, 1, 2))
+        _, _, st = vision._conv_apply(p, x, 1, 4, train=True, bn_momentum=0.9)
+        np.testing.assert_allclose(
+            np.asarray(st["bn_mean"]),
+            np.asarray(0.9 * p["bn_mean"] + 0.1 * mu), rtol=1e-5)
+
+    def test_forward_train_returns_and_applies_bn_state(self):
+        cfg = vision.VisionConfig(name="t", arch="vgg_tiny", num_classes=10)
+        params = vision.init_params(jax.random.PRNGKey(0), cfg)
+        x = jax.random.uniform(jax.random.PRNGKey(1), (4, 32, 32, 3))
+        _, _, aux_e = vision.forward(params, x, cfg)
+        assert "bn_state" not in aux_e
+        _, _, aux_t = vision.forward(params, x, cfg, train=True)
+        assert "bn_state" in aux_t
+        new = vision.apply_bn_state(params, aux_t["bn_state"])
+        st0 = aux_t["bn_state"]["conv0"]
+        np.testing.assert_array_equal(
+            np.asarray(new["layers"]["conv0"]["bn_mean"]),
+            np.asarray(st0["bn_mean"]))
+        # untouched leaves survive the merge
+        np.testing.assert_array_equal(
+            np.asarray(new["layers"]["conv0"]["w"]),
+            np.asarray(params["layers"]["conv0"]["w"]))
+
+    def test_trained_eval_uses_running_stats(self):
+        """After fit(), eval-mode logits for one frame are the same whatever
+        batch it rides in (backbone determinism; the frontend's global Hoyer
+        threshold is per-exposure by design and is exercised elsewhere)."""
+        from repro.train.vision import fit
+        cfg = vision.VisionConfig(name="t", arch="vgg_tiny", num_classes=10)
+        params = vision.init_params(jax.random.PRNGKey(0), cfg)
+        stream = ImageStream(hw=32, num_classes=10, global_batch=16)
+        params = fit(params, cfg, stream, steps=5)
+        # running stats moved off their init values
+        bn = params["layers"]["conv0"]
+        assert float(jnp.max(jnp.abs(bn["bn_mean"]))) > 0.0
 
 
 def test_resnet_projection_shortcut_present():
