@@ -54,7 +54,7 @@ def legacy_double_conv_step(fe_cfg, block_n: int = PREFIX_BLOCK_N):
     tiled at the old 128-row default (the fused kernel couldn't raise it —
     its elementwise tail shared the MXU tile, which is exactly what the
     two-kernel split decouples)."""
-    from repro.core import hoyer, p2m
+    from repro.core import hoyer, p2m, pixel
     from repro.frontend.backends import _v_conv_stats
     from repro.kernels import ops
 
@@ -68,7 +68,8 @@ def legacy_double_conv_step(fe_cfg, block_n: int = PREFIX_BLOCK_N):
                          kernel=pcfg.kernel_size, stride=pcfg.stride,
                          pixel_params=pcfg.pixel, mtj_params=pcfg.mtj,
                          interpret=fe_cfg.interpret, block_n=block_n)
-        return o, {"theta": theta, **_v_conv_stats(u, theta, pcfg.pixel)}
+        return o, {"theta": theta,
+                   **_v_conv_stats(pixel.conv_voltage(u, theta, pcfg.pixel))}
 
     return step
 

@@ -11,6 +11,7 @@ import time
 
 def main() -> None:
     from benchmarks import paper_benchmarks as pb
+    from benchmarks import variation_bench
     benches = [
         pb.bench_frontend_backends,
         pb.bench_fig5_multi_mtj,
@@ -20,6 +21,7 @@ def main() -> None:
         pb.bench_kernels,
         pb.bench_table1_accuracy_proxy,
         pb.bench_fig8_error_sensitivity,
+        variation_bench.bench_rows,
     ]
     print("name,value,derived")
     failures = 0

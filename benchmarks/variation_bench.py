@@ -1,0 +1,158 @@
+"""Device-variation benchmark -> BENCH_variation.json.
+
+The production question behind repro/variation (DESIGN.md §7): a fleet of
+sampled chips is NOT the nominal device — what do the Fig. 5 error modes,
+the burst-read margin, and the end task lose at realistic mismatch levels,
+and how much does the per-channel calibration trim buy back?
+
+Per sigma scale of a reference mismatch profile this writes:
+
+    yield_fraction, fail/false rates, worst read margin   (vmapped MC fleet)
+    acc_uncalibrated vs acc_calibrated                    (device-backend
+                                                           eval of a trained
+                                                           vgg_tiny, paired
+                                                           chips + batches)
+    rate_err_before / rate_err_after                      (the calibration
+                                                           loop's own audit)
+
+Usage:
+    PYTHONPATH=src python benchmarks/variation_bench.py [--smoke] [--out F]
+
+``--smoke`` (CI): 2 chips, 1 eval batch, small sigma grid, 8-chip analytic
+fleet, interpret mode — same JSON schema. Training stays at the full 800
+steps in smoke too (device-backend accuracy only becomes meaningful there;
+see ``run()``), so the smoke run is ~2 min wall-clock.
+``--warnings-as-errors`` promotes any Python warning raised from the
+repro.variation package to an error (ci.sh sets it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import warnings
+
+
+# reference mismatch profile (sigma scale 1.0): dominated by the offset
+# families calibration can trim (pixel/subtractor offset + correlated column
+# noise + MTJ logit offset), with small gain/slope/resistance spreads
+BASE_PROFILE = dict(sigma_logit_offset=0.4, sigma_logit_slope=0.05,
+                    sigma_pixel_gain=0.05, sigma_pixel_offset=0.25,
+                    sigma_column=0.15, sigma_r_p=0.05, sigma_tmr=0.05)
+
+
+def run(smoke: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data import ImageStream
+    from repro.models import vision
+    from repro.train import vision as vision_loop
+    from repro.variation import VariationConfig, calibrate, yield_sweep
+    from repro.variation.yield_analysis import accuracy_sweep
+
+    # 800 steps is where device-backend eval accuracy takes off (~26% at
+    # 500 -> ~79% at 800 with hoyer_coeff=1e-5); smoke keeps it so the
+    # calibrated-vs-uncalibrated comparison has real signal in CI too
+    steps = 800
+    n_chips_mc = 8 if smoke else 64        # analytic fleet (vmapped, cheap)
+    n_chips_acc = 2 if smoke else 4        # device-backend eval (expensive)
+    eval_batches = 1 if smoke else 3
+    sigmas = (0.1, 1.0) if smoke else (0.1, 0.5, 1.0)
+
+    # hoyer_coeff=1e-5 pushes pre-activation mass away from the switching
+    # threshold — without it the stochastic device draw randomizes the many
+    # marginal bits of a weakly-regularized net and device-backend accuracy
+    # collapses even on the NOMINAL chip (measured: 0.79 vs 0.17 device acc
+    # at 800 steps), drowning the variation signal this bench measures
+    cfg = vision.VisionConfig(name="variation_bench", arch="vgg_tiny",
+                              num_classes=10, hoyer_coeff=1e-5)
+    params = vision.init_params(jax.random.PRNGKey(0), cfg)
+    stream = ImageStream(hw=32, num_classes=10, global_batch=64)
+    params = vision_loop.fit(params, cfg, stream, steps, lr=3e-3,
+                             key=jax.random.PRNGKey(42))
+
+    ev = ImageStream(hw=32, num_classes=10, global_batch=64, seed=99)
+    batches = [ev.next_batch() for _ in range(eval_batches)]
+    cal_frames = ImageStream(hw=32, num_classes=10, global_batch=32,
+                             seed=7).next_batch()["image"]
+    vcfg = VariationConfig(**BASE_PROFILE)
+
+    # nominal-chip reference accuracy (device backend, same batches)
+    acc0, n0 = 0.0, 0
+    for j, b in enumerate(batches):
+        logits, _, _ = vision.forward(params, b["image"], cfg,
+                                      backend="device",
+                                      key=jax.random.fold_in(
+                                          jax.random.PRNGKey(5), j))
+        acc0 += float(jnp.sum(jnp.argmax(logits, -1) == b["label"]))
+        n0 += int(b["label"].shape[0])
+
+    results = {"smoke": smoke, "train_steps": steps,
+               "n_chips_mc": n_chips_mc, "n_chips_acc": n_chips_acc,
+               "profile": BASE_PROFILE,
+               "acc_nominal_device": acc0 / n0, "sigma_points": []}
+
+    fleet = yield_sweep(vcfg, sigmas, n_chips_mc, cfg.p2m.out_channels,
+                        cfg.p2m.mtj)
+    accs = accuracy_sweep(params, cfg, batches, vcfg=vcfg, sigmas=sigmas,
+                          n_chips=n_chips_acc, calibration_frames=cal_frames,
+                          key=jax.random.PRNGKey(11))
+    for s, frow, arow in zip(sigmas, fleet, accs):
+        # the calibration loop's own audit numbers at this sigma (chip 0)
+        art = calibrate(params["p2m"], cfg.p2m, vcfg.scaled(float(s)),
+                        cal_frames, chip_id=0, iters=12)
+        results["sigma_points"].append({
+            **frow, **arow,
+            "rate_err_before": float(jnp.mean(art.rate_err_before)),
+            "rate_err_after": float(jnp.mean(art.rate_err_after)),
+        })
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="2 chips / 1 eval batch / small sigma grid (CI); "
+                         "training stays at the full 800 steps")
+    ap.add_argument("--out", default="BENCH_variation.json")
+    ap.add_argument("--warnings-as-errors", action="store_true",
+                    help="fail on any warning raised from repro.variation")
+    args = ap.parse_args()
+    if args.warnings_as_errors:
+        warnings.filterwarnings("error", module=r"repro\.variation.*")
+    results = run(smoke=args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
+    print(f"  nominal device acc: {results['acc_nominal_device']*100:5.1f}%")
+    for row in results["sigma_points"]:
+        cal = row.get("acc_calibrated")
+        cal_s = f"{cal*100:5.1f}%" if cal is not None else "  n/a"
+        print(f"  sigma x{row['sigma_scale']:<4g} yield "
+              f"{row['yield_fraction']*100:5.1f}% -> cal "
+              f"{row['yield_fraction_calibrated']*100:5.1f}%  acc uncal "
+              f"{row['acc_uncalibrated']*100:5.1f}% -> cal {cal_s}  "
+              f"rate-err {row['rate_err_before']:.4f} -> "
+              f"{row['rate_err_after']:.4f}")
+
+
+def bench_rows():
+    """(name, value, derived) rows for benchmarks/run.py (smoke scale)."""
+    r = run(smoke=True)
+    yield "variation_acc_nominal_device", r["acc_nominal_device"], False
+    for row in r["sigma_points"]:
+        s = row["sigma_scale"]
+        yield f"variation_yield_sigma{s:g}", row["yield_fraction"], False
+        yield (f"variation_yield_cal_sigma{s:g}",
+               row["yield_fraction_calibrated"], False)
+        yield (f"variation_acc_uncal_sigma{s:g}", row["acc_uncalibrated"],
+               False)
+        if "acc_calibrated" in row:
+            yield (f"variation_acc_cal_sigma{s:g}", row["acc_calibrated"],
+                   False)
+        yield (f"variation_cal_rate_err_reduction_sigma{s:g}",
+               row["rate_err_before"] - row["rate_err_after"], True)
+
+
+if __name__ == "__main__":
+    main()

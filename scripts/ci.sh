@@ -1,10 +1,16 @@
 #!/usr/bin/env bash
 # Minimal CI: the tier-1 verify command (see ROADMAP.md) + the frontend
 # throughput benchmark in smoke mode (writes BENCH_frontend.json so the
-# single-pass-vs-double-conv speedup is tracked on every run).
+# single-pass-vs-double-conv speedup is tracked on every run) + the
+# device-variation smoke sweep (small sigma, 2 chips, interpret mode;
+# writes BENCH_variation.json, with any warning raised from the
+# repro.variation package promoted to an error).
 # Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/frontend_bench.py --smoke --out BENCH_frontend.json
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/variation_bench.py --smoke --warnings-as-errors \
+    --out BENCH_variation.json

@@ -77,12 +77,21 @@ DEFAULT_MTJ = MTJParams()
 
 
 def switching_logit(voltage: jax.Array,
-                    params: MTJParams = DEFAULT_MTJ) -> jax.Array:
+                    params: MTJParams = DEFAULT_MTJ,
+                    *,
+                    logit_offset: jax.Array | float = 0.0,
+                    logit_gain: jax.Array | float = 1.0) -> jax.Array:
     """Monotone logit(P_sw) vs applied voltage, 700 ps pulse, AP->P.
 
     Piecewise-linear in logit space through the three measured points, with
     end-segment extrapolation. Written in closed form (where/arithmetic only,
     no gather) so the exact same function traces inside the Pallas kernel.
+
+    ``logit_offset`` / ``logit_gain`` are the device-variation hooks
+    (repro/variation): per-device or per-channel arrays broadcast against the
+    voltage map perturb the fit as ``gain * logit + offset`` — an additive
+    VCMA-coefficient offset and a multiplicative slope spread — without
+    forking the physics. The defaults (0, 1) are bit-exact no-ops.
     """
     v = jnp.asarray(voltage)
     (v0, v1, v2) = params.measured_voltages
@@ -93,7 +102,7 @@ def switching_logit(voltage: jax.Array,
     # the high line covers v >= v1 (including the extrapolation above v2)
     lo = l0 + slope_lo * (v - v0)
     hi = l1 + slope_hi * (v - v1)
-    return jnp.where(v < v1, lo, hi)
+    return logit_gain * jnp.where(v < v1, lo, hi) + logit_offset
 
 
 def pulse_envelope(pulse_ps: jax.Array, period_ps: float) -> jax.Array:
@@ -105,12 +114,19 @@ def switching_probability(
     voltage: jax.Array,
     pulse_ps: float | jax.Array = 700.0,
     params: MTJParams = DEFAULT_MTJ,
+    *,
+    logit_offset: jax.Array | float = 0.0,
+    logit_gain: jax.Array | float = 1.0,
 ) -> jax.Array:
     """P(AP->P switch) for a voltage pulse of given width.
 
     Exactly reproduces the three measured points at 700 ps.
+    ``logit_offset`` / ``logit_gain`` forward to ``switching_logit`` — the
+    device-variation perturbation hooks (defaults are bit-exact no-ops).
     """
-    p_v = jax.nn.sigmoid(switching_logit(voltage, params))
+    p_v = jax.nn.sigmoid(switching_logit(voltage, params,
+                                         logit_offset=logit_offset,
+                                         logit_gain=logit_gain))
     env = pulse_envelope(pulse_ps, params.precession_period_ps)
     # normalise so the envelope is 1 at the nominal write pulse
     env_ref = pulse_envelope(params.write_pulse_ps, params.precession_period_ps)
@@ -162,6 +178,29 @@ def majority_activation_probability(
     return jnp.sum(pmf, axis=-1)
 
 
+def majority_prob_hetero(p_devices: jax.Array, majority: int) -> jax.Array:
+    """P(>= majority of n *heterogeneous* devices switch) — Poisson binomial.
+
+    ``p_devices`` carries the per-device probabilities on its LAST axis
+    (..., n); unlike ``majority_prob_poly`` the devices need not share one
+    P_sw, which is exactly the device-variation case (repro/variation): each
+    of the n redundant MTJs in a kernel sits at its own process corner.
+    Computed by the standard dynamic-programming convolution over devices
+    (multiply/add only — exact at p in {0, 1}); for identical devices it
+    reduces to ``majority_prob_poly`` (property-tested).
+    """
+    n = p_devices.shape[-1]
+    pmf = jnp.zeros(p_devices.shape[:-1] + (n + 1,),
+                    jnp.result_type(p_devices, jnp.float32))
+    pmf = pmf.at[..., 0].set(1.0)
+    for i in range(n):
+        p = p_devices[..., i:i + 1]
+        shifted = jnp.concatenate(
+            [jnp.zeros_like(pmf[..., :1]), pmf[..., :-1]], axis=-1)
+        pmf = pmf * (1.0 - p) + shifted * p
+    return jnp.sum(pmf[..., majority:], axis=-1)
+
+
 def majority_error_rates(
     p_should_switch: float | jax.Array,
     p_should_not: float | jax.Array,
@@ -193,18 +232,43 @@ def sample_majority_activation(
     return (votes >= majority).astype(p_single.dtype)
 
 
+def sample_majority_activation_per_device(
+    key: jax.Array, p_devices: jax.Array, majority: int = 4
+) -> jax.Array:
+    """Monte-Carlo majority vote over *heterogeneous* devices.
+
+    ``p_devices`` is (..., n) with the per-device switching probabilities on
+    the last axis (the device-variation path — each redundant MTJ at its own
+    corner). Returns a float {0,1} array of shape ``p_devices.shape[:-1]``.
+    With ``p_devices = p_single[..., None]`` broadcast to (..., n) and the
+    same key this is bit-identical to ``sample_majority_activation``.
+    """
+    draws = jax.random.bernoulli(key, p_devices, p_devices.shape)
+    votes = jnp.sum(draws.astype(jnp.int32), axis=-1)
+    return (votes >= majority).astype(p_devices.dtype)
+
+
 # --- burst read (Fig. 6) -----------------------------------------------------
 
 def read_voltage_divider(
     state_parallel: jax.Array, params: MTJParams = DEFAULT_MTJ,
     r_load: float = 6.0e3,
+    *,
+    r_p_scale: jax.Array | float = 1.0,
+    tmr_scale: jax.Array | float = 1.0,
 ) -> jax.Array:
     """V_MTJ seen by the comparator for P / AP states (resistive divider).
 
     The > 150% TMR gives a wide sense margin; the comparator threshold is
-    placed mid-way between the two levels.
+    placed mid-way between the two levels. ``r_p_scale`` / ``tmr_scale`` are
+    the device-variation hooks: relative per-device R_P and TMR spreads
+    (arrays broadcast against the state map) perturb the divider levels —
+    the yield-analysis read-margin model (repro/variation). Defaults (1, 1)
+    are bit-exact no-ops.
     """
-    r = jnp.where(state_parallel > 0.5, params.r_p, params.r_ap)
+    r_p = params.r_p * r_p_scale
+    r_ap = r_p * (1.0 + params.tmr * tmr_scale)
+    r = jnp.where(state_parallel > 0.5, r_p, r_ap)
     return params.read_voltage * r_load / (r + r_load)
 
 
@@ -214,12 +278,18 @@ def comparator_threshold(params: MTJParams = DEFAULT_MTJ, r_load: float = 6.0e3)
     return float(0.5 * (v_p + v_ap))
 
 
-def burst_read(states: jax.Array, params: MTJParams = DEFAULT_MTJ) -> jax.Array:
+def burst_read(states: jax.Array, params: MTJParams = DEFAULT_MTJ,
+               r_load: float = 6.0e3) -> jax.Array:
     """Sequential burst read of MTJ states -> binary activations (Fig. 6).
 
     ``states`` is {0,1} (1 = parallel = activated). A parallel device pulls
     V_MTJ *above* the comparator threshold -> output spike. Disturb-free by
     VCMA polarity (read voltage raises the barrier).
+
+    ``r_load`` is forwarded to BOTH the divider and the comparator threshold
+    so the two can never disagree. (History: the divider used its default
+    load while the threshold was computed independently — a caller-chosen
+    r_load would have silently compared against the wrong mid-point.)
     """
-    v = read_voltage_divider(states, params)
-    return (v > comparator_threshold(params)).astype(jnp.float32)
+    v = read_voltage_divider(states, params, r_load)
+    return (v > comparator_threshold(params, r_load)).astype(jnp.float32)

@@ -75,17 +75,30 @@ def phase_conv(x: jax.Array, w: jax.Array, stride: int) -> jax.Array:
 _phase_conv = phase_conv
 
 
-def hardware_conv(x: jax.Array, w: jax.Array, cfg: P2MConfig) -> jax.Array:
+def hardware_conv(x: jax.Array, w: jax.Array, cfg: P2MConfig, *,
+                  curve_gain: jax.Array | None = None,
+                  out_offset: jax.Array | None = None) -> jax.Array:
     """Two-phase signed MAC with the per-phase circuit non-linearity.
 
     Phase 1 integrates the negative-weight transistors, phase 2 the positive
     ones; each accumulated bitline voltage sees the Fig. 4a curve, then the
     passive subtractor forms the difference.
+
+    ``curve_gain`` perturbs the pixel transfer curve per output channel (the
+    ``pixel.get_curve`` mismatch hook — applied to BOTH phases, so for a
+    per-channel gain it is exactly ``gain * u``); ``out_offset`` is the
+    subtractor DC-offset mismatch, added after the phase difference (a
+    common-mode curve offset cancels in the subtraction). Defaults: the
+    unperturbed physics, bit-identical to before the hooks existed.
     """
     wq = quantize_weights(w, cfg.weight_bits)
     mac_pos = phase_conv(x, jnp.maximum(wq, 0.0), cfg.stride)
     mac_neg = phase_conv(x, jnp.maximum(-wq, 0.0), cfg.stride)
-    return pixel.hardware_conv_output(mac_pos, mac_neg, cfg.pixel)
+    if curve_gain is None and out_offset is None:
+        return pixel.hardware_conv_output(mac_pos, mac_neg, cfg.pixel)
+    g = pixel.get_curve(cfg.pixel.curve, cfg.pixel, gain=curve_gain)
+    u = g(mac_pos) - g(mac_neg)
+    return u if out_offset is None else u + out_offset
 
 
 def fuse_batchnorm(w: jax.Array, gamma: jax.Array, beta: jax.Array,

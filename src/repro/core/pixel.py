@@ -35,17 +35,32 @@ def register_curve(name: str):
     return deco
 
 
-def get_curve(name: str, p: "PixelCircuitParams" = None) -> CurveFn:
+def get_curve(name: str, p: "PixelCircuitParams" = None, *,
+              gain: jax.Array | float | None = None,
+              offset: jax.Array | float | None = None) -> CurveFn:
     """Resolve a registered transfer curve, bound to circuit params.
 
     The returned closure uses only elementwise jnp ops, so it can be traced
     inside the fused Pallas kernel as well as the pure-JAX paths (the kernel
     no longer bakes its own copy of the curve — DESIGN.md §3/§5).
+
+    ``gain`` / ``offset`` are the pixel-mismatch hooks (repro/variation):
+    array-valued perturbations (broadcast against the curve input, e.g. one
+    value per output channel) return ``x -> gain * g(x) + offset`` without
+    forking the registered physics. Note the two-phase subtractor cancels a
+    common-mode ``offset`` (g'(pos) - g'(neg) drops it), so additive pixel
+    mismatch is modelled at the subtractor instead (DESIGN.md §7); ``None``
+    (the default) keeps the registered curve identically.
     """
     if name not in _CURVES:
         raise KeyError(f"unknown pixel curve {name!r}; "
                        f"registered: {sorted(_CURVES)}")
-    return _CURVES[name](p if p is not None else DEFAULT_PIXEL)
+    g = _CURVES[name](p if p is not None else DEFAULT_PIXEL)
+    if gain is None and offset is None:
+        return g
+    gn = 1.0 if gain is None else gain
+    off = 0.0 if offset is None else offset
+    return lambda x: gn * g(x) + off
 
 
 def circuit_curve(x: jax.Array, saturation: float = 2.5) -> jax.Array:

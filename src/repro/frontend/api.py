@@ -40,6 +40,7 @@ import jax
 
 from repro.core import p2m
 from repro.frontend import shutter
+from repro.variation.chip import VariationConfig
 
 # backend signature: (cfg, params, images, key) -> (activations, aux)
 BackendFn = Callable[["FrontendConfig", dict, jax.Array,
@@ -98,6 +99,12 @@ class FrontendConfig:
     backend: str = "analog"
     global_shutter: bool = True   # run burst_read + reset accounting
     interpret: bool = True        # Pallas interpret mode (CPU); False on TPU
+    # device-variation handle (repro/variation, DESIGN.md §7): when set, the
+    # frontend simulates THIS sampled chip — the device/pallas backends
+    # thread its mismatch maps through the physics and the analog backend
+    # draws its Fig. 8 noise from them. None = the nominal (perfect) chip.
+    variation: Optional[VariationConfig] = None
+    chip_id: int = 0              # which chip of the population this is
     block_n: int = 512            # kernel-A patch-row block (the MXU matmul
                                   # tile; ~0.6 MB VMEM/block at K=C=128)
     block_n_elem: int = 4096      # kernel-B row-block cap (elementwise, no

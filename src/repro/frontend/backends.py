@@ -20,6 +20,12 @@ which physical effects they model:
 
 ``hoyer_loss`` in aux is the RAW regularizer value — consumers scale by
 ``hoyer_coeff`` exactly once (see models/vision.py).
+
+Device variation (DESIGN.md §7): ``cfg.variation`` + ``cfg.chip_id`` select
+a sampled chip instance; ``device`` runs it exactly per-device, ``pallas``
+folds it into kernel B's per-channel operand rows, ``analog`` draws its
+Fig. 8 flips from the chip's error maps. A programmed calibration trim
+travels as ``params["cal_trim"]`` (variation/calibrate.py).
 """
 from __future__ import annotations
 
@@ -30,6 +36,7 @@ import jax.numpy as jnp
 
 from repro.core import hoyer, mtj, p2m, pixel
 from repro.frontend.api import FrontendConfig, register_backend
+from repro.variation import chip as chip_mod
 
 
 def _theta(u: jax.Array, v_th: jax.Array) -> jax.Array:
@@ -37,12 +44,40 @@ def _theta(u: jax.Array, v_th: jax.Array) -> jax.Array:
     return hoyer.effective_threshold(u, v_th) * v_th
 
 
-def _v_conv_stats(u: jax.Array, theta: jax.Array,
-                  p: pixel.PixelCircuitParams) -> Dict:
-    """Statistics of the subtractor voltage driving the VC-MTJ (paper Fig. 4b)."""
-    v = pixel.conv_voltage(u, theta, p)
+def _v_conv_stats(v: jax.Array) -> Dict:
+    """Statistics of the subtractor voltage driving the VC-MTJ (paper Fig. 4b).
+
+    Takes the voltage map itself so every backend — including ``device``,
+    which already has V_CONV in hand (possibly chip-perturbed) — reduces
+    through this ONE implementation instead of re-deriving the stats inline.
+    """
     return {"v_conv_mean": jnp.mean(v), "v_conv_min": jnp.min(v),
             "v_conv_max": jnp.max(v)}
+
+
+def _sampled_chip(cfg: FrontendConfig) -> Optional[chip_mod.ChipMaps]:
+    """The chip this frontend simulates, or None for the nominal device.
+
+    An all-sigma-zero profile is treated as no variation at all (it samples
+    exact identity maps anyway) so the nominal paths stay byte-for-byte the
+    pre-subsystem code — including the analog backend, which would otherwise
+    start drawing the nominal chip's tiny-but-nonzero Fig. 5 error flips.
+    """
+    if cfg.variation is None or not cfg.variation.enabled:
+        return None
+    return chip_mod.sample_chip(cfg.variation, cfg.p2m.out_channels,
+                                cfg.p2m.mtj.n_redundant, cfg.chip_id)
+
+
+def _ste_flip(o: jax.Array, key: jax.Array, p_fail, p_false) -> jax.Array:
+    """Fig. 8 bit flips with a straight-through gradient (scalar or mapped
+    probabilities — arrays broadcast against the activation map)."""
+    k1, k2 = jax.random.split(key)
+    fail = jax.random.bernoulli(k1, p_fail, o.shape)
+    false = jax.random.bernoulli(k2, p_false, o.shape)
+    noisy = jnp.where(o > 0.5, 1.0 - fail.astype(o.dtype),
+                      false.astype(o.dtype))
+    return o + jax.lax.stop_gradient(noisy - o)   # STE through the flips
 
 
 @register_backend("ideal", differentiable=True)
@@ -55,7 +90,7 @@ def ideal_backend(cfg: FrontendConfig, params: dict, images: jax.Array,
     o, hl = hoyer.hoyer_spike(u, params["v_th"])
     theta = _theta(u, params["v_th"])
     aux = {"hoyer_loss": hl, "theta": theta,
-           **_v_conv_stats(u, theta, pcfg.pixel)}
+           **_v_conv_stats(pixel.conv_voltage(u, theta, pcfg.pixel))}
     return o, aux
 
 
@@ -66,21 +101,32 @@ def analog_backend(cfg: FrontendConfig, params: dict, images: jax.Array,
 
     If cfg.p2m.noise_p_fail / noise_p_false are set (Fig. 8 robustness study)
     and a key is given, activation bits are flipped with those probabilities
-    via a straight-through perturbation.
+    via a straight-through perturbation. With ``cfg.variation`` set the flip
+    probabilities come from the sampled chip instead — per-channel
+    (fail, false) maps derived from each channel's heterogeneous majority
+    error at the Fig. 5 operating points (spatial mismatch structure, not
+    i.i.d. scalars), so variation-aware training sees the same chip the
+    hardware backends simulate.
     """
     pcfg = cfg.p2m
+    chip = _sampled_chip(cfg)
     u = p2m.hardware_conv(images, params["w"], pcfg)
     o, hl = hoyer.hoyer_spike(u, params["v_th"])
-    if key is not None and (pcfg.noise_p_fail > 0 or pcfg.noise_p_false > 0):
-        k1, k2 = jax.random.split(key)
-        fail = jax.random.bernoulli(k1, pcfg.noise_p_fail, o.shape)
-        false = jax.random.bernoulli(k2, pcfg.noise_p_false, o.shape)
-        noisy = jnp.where(o > 0.5, 1.0 - fail.astype(o.dtype),
-                          false.astype(o.dtype))
-        o = o + jax.lax.stop_gradient(noisy - o)   # STE through the flips
+    if key is not None and chip is not None:
+        # per-channel (C,) chip maps broadcast over the activation's channel
+        # axis; any CONFIGURED scalar Fig. 8 noise still applies — the two
+        # are independent flip sources, combined as 1 - (1-a)(1-b) (a
+        # variation profile must not silently cancel an explicit noise study)
+        p_fail, p_false = chip_mod.noise_maps(chip, pcfg.mtj, pcfg.pixel)
+        p_fail = 1.0 - (1.0 - p_fail) * (1.0 - pcfg.noise_p_fail)
+        p_false = 1.0 - (1.0 - p_false) * (1.0 - pcfg.noise_p_false)
+        o = _ste_flip(o, key, p_fail, p_false)
+    elif key is not None and (pcfg.noise_p_fail > 0
+                              or pcfg.noise_p_false > 0):
+        o = _ste_flip(o, key, pcfg.noise_p_fail, pcfg.noise_p_false)
     theta = _theta(u, params["v_th"])
     aux = {"hoyer_loss": hl, "theta": theta,
-           **_v_conv_stats(u, theta, pcfg.pixel)}
+           **_v_conv_stats(pixel.conv_voltage(u, theta, pcfg.pixel))}
     return o, aux
 
 
@@ -91,19 +137,38 @@ def device_backend(cfg: FrontendConfig, params: dict, images: jax.Array,
 
     conv -> threshold-matching voltage -> per-MTJ stochastic switching
     (switching_probability at the applied V_CONV) x n_redundant -> majority.
+
+    With ``cfg.variation`` set (or a programmed ``params["cal_trim"]``) the
+    chain runs at the sampled chip's corners: pixel gain/offset (+ trim) on
+    u, then each of the n redundant MTJs switches at its OWN logit corner
+    and the majority is taken over the heterogeneous draws — the exact
+    per-device reference the channel-aggregated pallas kernel approximates.
+    theta stays derived from the unperturbed u (the algorithmic threshold is
+    digital — kernel A's semantics).
     """
     if key is None:
         raise ValueError("the 'device' backend is stochastic — pass key=")
     pcfg = cfg.p2m
+    chip = _sampled_chip(cfg)
+    trim = params.get("cal_trim")
     u = p2m.hardware_conv(images, params["w"], pcfg)
     theta = _theta(u, params["v_th"])
-    v_conv = pixel.conv_voltage(u, theta, pcfg.pixel)
-    p_sw = mtj.switching_probability(v_conv, pcfg.mtj.write_pulse_ps, pcfg.mtj)
-    o = mtj.sample_majority_activation(
-        key, p_sw, pcfg.mtj.n_redundant, pcfg.mtj.majority)
+    if chip is None and trim is None:
+        v_conv = pixel.conv_voltage(u, theta, pcfg.pixel)
+        p_sw = mtj.switching_probability(v_conv, pcfg.mtj.write_pulse_ps,
+                                         pcfg.mtj)
+        o = mtj.sample_majority_activation(
+            key, p_sw, pcfg.mtj.n_redundant, pcfg.mtj.majority)
+    else:
+        if chip is None:
+            chip = chip_mod.identity_chip(pcfg.out_channels,
+                                          pcfg.mtj.n_redundant)
+        v_conv, p_dev = chip_mod.device_chain(u, theta, chip, trim,
+                                              pcfg.pixel, pcfg.mtj)
+        o = mtj.sample_majority_activation_per_device(
+            key, p_dev, pcfg.mtj.majority)
     aux = {"hoyer_loss": jnp.zeros(()), "theta": theta,
-           "v_conv_mean": jnp.mean(v_conv),
-           "v_conv_min": jnp.min(v_conv), "v_conv_max": jnp.max(v_conv)}
+           **_v_conv_stats(v_conv)}
     return o, aux
 
 
@@ -123,10 +188,21 @@ def pallas_backend(cfg: FrontendConfig, params: dict, images: jax.Array,
         raise ValueError("the 'pallas' backend is stochastic — pass key=")
     from repro.kernels import ops   # deferred: keep core import-light
     pcfg = cfg.p2m
+    chip = _sampled_chip(cfg)
+    trim = params.get("cal_trim")
+    chan = None
+    if chip is not None or trim is not None:
+        if chip is None:
+            chip = chip_mod.identity_chip(pcfg.out_channels,
+                                          pcfg.mtj.n_redundant)
+        # fold the chip (+ programmed trim) into kernel B's per-channel
+        # operand rows — the variation-aware kernel costs two fused
+        # multiply-adds, nothing else changes (DESIGN.md §7)
+        chan = chip_mod.channel_operands(chip, trim)
     wq = p2m.quantize_weights(params["w"], pcfg.weight_bits)
     o, kernel_aux = ops.p2m_frontend(
         images, wq, params["v_th"], key,
-        kernel=pcfg.kernel_size, stride=pcfg.stride,
+        kernel=pcfg.kernel_size, stride=pcfg.stride, chan=chan,
         pixel_params=pcfg.pixel, mtj_params=pcfg.mtj,
         interpret=cfg.interpret, block_n=cfg.block_n,
         block_n_elem=cfg.block_n_elem)

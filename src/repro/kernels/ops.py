@@ -131,6 +131,7 @@ def _elem_block(n: int, block_n: int, block_n_elem: int) -> int:
                                              "block_n_elem"))
 def p2m_frontend(images: jax.Array, w: jax.Array, v_th: jax.Array,
                  key: jax.Array, *, kernel: int = 3, stride: int = 2,
+                 chan: Optional[jax.Array] = None,
                  pixel_params: pixel_model.PixelCircuitParams =
                  pixel_model.DEFAULT_PIXEL,
                  mtj_params: mtj_model.MTJParams = mtj_model.DEFAULT_MTJ,
@@ -149,6 +150,12 @@ def p2m_frontend(images: jax.Array, w: jax.Array, v_th: jax.Array,
     binary and aux carries ``theta`` plus the ``v_conv_mean/min/max`` stats —
     every aux value comes out of the kernels' partial reductions, not a
     shadow pure-JAX conv.
+
+    ``chan`` is the optional (CHAN_ROWS, Cout) per-channel device-variation
+    operand for kernel B (``repro.variation.chip.channel_operands`` — pixel
+    gain/offset + calibration trim + channel MTJ corner); ``None`` runs the
+    nominal chip (identity rows, bit-exact pass-through). Padded channels get
+    zero rows, which keeps the padded lanes at u = 0 exactly.
     """
     b, h, wd, c = images.shape
     cout = w.shape[-1]
@@ -167,6 +174,12 @@ def p2m_frontend(images: jax.Array, w: jax.Array, v_th: jax.Array,
         patches = jnp.pad(patches, ((0, n_pad), (0, 0)))
         bits_p = jnp.pad(bits_p, ((0, n_pad), (0, 0)))
 
+    chan_p = None
+    if chan is not None:
+        # pad the variation rows to the padded channel count with zeros so
+        # padded lanes stay at u = 0 (0 * u + 0), exactly as without chan
+        chan_p = _pad_to(chan.astype(jnp.float32), 1, 128)
+
     u, hoyer_partials = p2m_phase_a_pallas(
         patches.astype(jnp.float32), wm.astype(jnp.float32),
         v_th.reshape(1, 1).astype(jnp.float32),
@@ -174,7 +187,7 @@ def p2m_frontend(images: jax.Array, w: jax.Array, v_th: jax.Array,
     theta = combine_hoyer_partials(hoyer_partials, v_th.astype(jnp.float32))
     out, v_partials = p2m_phase_b_pallas(
         u, theta.reshape(1, 1), bits_p,
-        n_valid=n, c_valid=cout,
+        n_valid=n, c_valid=cout, chan=chan_p,
         pixel_params=pixel_params, mtj_params=mtj_params,
         block_n=_elem_block(u.shape[0], block_n, block_n_elem),
         interpret=interpret)

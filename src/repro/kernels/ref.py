@@ -93,6 +93,7 @@ def p2m_phase_a_ref(patches: jax.Array, w: jax.Array, v_th: jax.Array, *,
 
 def p2m_phase_b_ref(u: jax.Array, theta: jax.Array, bits: jax.Array, *,
                     n_valid: int, c_valid: int,
+                    chan: jax.Array | None = None,
                     pixel_params: pixel_model.PixelCircuitParams =
                     pixel_model.DEFAULT_PIXEL,
                     mtj_params: mtj_model.MTJParams = mtj_model.DEFAULT_MTJ,
@@ -101,13 +102,26 @@ def p2m_phase_b_ref(u: jax.Array, theta: jax.Array, bits: jax.Array, *,
 
     Returns ``(activations, v_conv_partials)`` as ``p2m_phase_b_pallas``
     does: float {0,1} (N, C) plus per-block masked (sum, min, max) of the
-    subtractor voltage (N/block_n, STAT_LANES).
+    subtractor voltage (N/block_n, STAT_LANES). ``chan`` is the same
+    (CHAN_ROWS, C) per-channel variation operand the kernel consumes —
+    identical expressions in identical order, so parity stays bit-exact for
+    non-default maps too.
     """
     from repro.kernels import p2m_conv as k
+    from repro.variation import chip as chip_mod
 
+    if chan is None:
+        chan = chip_mod.identity_operands(u.shape[1])
+    chan = jnp.asarray(chan, jnp.float32)
+    u = (u * chan[chip_mod.CHAN_U_GAIN:chip_mod.CHAN_U_GAIN + 1, :]
+         + chan[chip_mod.CHAN_U_OFFSET:chip_mod.CHAN_U_OFFSET + 1, :])
     v = pixel_model.conv_voltage(u, theta, pixel_params)
     p_sw = mtj_model.switching_probability(
-        v, mtj_params.write_pulse_ps, mtj_params)
+        v, mtj_params.write_pulse_ps, mtj_params,
+        logit_offset=chan[chip_mod.CHAN_LOGIT_OFFSET:
+                          chip_mod.CHAN_LOGIT_OFFSET + 1, :],
+        logit_gain=chan[chip_mod.CHAN_LOGIT_GAIN:
+                        chip_mod.CHAN_LOGIT_GAIN + 1, :])
     q = mtj_model.majority_prob_poly(
         p_sw, mtj_params.n_redundant, mtj_params.majority)
     draw = (bits.astype(jnp.float32) * (1.0 / 2 ** 32)) < q

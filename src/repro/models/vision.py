@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro import frontend
 from repro.core import hoyer, p2m
 from repro.models.params import ParamSpec, abstract_tree, axes_tree, init_tree
+from repro.variation.chip import VariationConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +33,10 @@ class VisionConfig:
     remove_first_maxpool: bool = False   # paper's Model* variants
     hoyer_coeff: float = 1e-8
     bn_momentum: float = 0.9             # EMA decay of the BN running stats
+    # device-variation handle (repro/variation): the sampled chip this
+    # model's sensor frontend simulates; None = the nominal chip
+    variation: Optional[VariationConfig] = None
+    chip_id: int = 0
 
     @property
     def frontend(self) -> frontend.FrontendConfig:
@@ -39,7 +44,9 @@ class VisionConfig:
                                        backend=self.frontend_backend,
                                        interpret=self.frontend_interpret,
                                        block_n=self.frontend_block_n,
-                                       block_n_elem=self.frontend_block_n_elem)
+                                       block_n_elem=self.frontend_block_n_elem,
+                                       variation=self.variation,
+                                       chip_id=self.chip_id)
 
 
 _VGG_PLANS = {

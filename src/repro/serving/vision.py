@@ -28,6 +28,11 @@ back into one result per incoming batch.
 ``out`` is a dict with ``labels``, ``probs``, and the frontend aux
 (sparsity, V_CONV stats, per-frame global-shutter energy accounting) so a
 deployment can monitor the sensor link, not just the predictions.
+
+Per-chip realism: when ``cfg.variation`` names a sampled chip, pass the
+chip's ``calibration=`` artifact (variation/calibrate.py) and the engine
+programs its trim into the frontend params at construction — each engine
+then simulates one distinct calibrated sensor out of the fleet.
 """
 from __future__ import annotations
 
@@ -52,7 +57,8 @@ class VisionEngine:
                  backend: Optional[str] = None, seed: int = 0,
                  mesh: Optional[Mesh] = None,
                  rules: Optional[sharding.ShardingRules] = None,
-                 microbatch: Optional[int] = None):
+                 microbatch: Optional[int] = None,
+                 calibration=None):
         self.cfg = cfg
         self.backend = backend or cfg.frontend_backend
         self.mesh = mesh
@@ -60,6 +66,15 @@ class VisionEngine:
         self.microbatch = microbatch
         self._key = jax.random.PRNGKey(seed)
         self._frame_count = 0
+        if calibration is not None:
+            # this engine serves ONE physical chip (cfg.variation/chip_id);
+            # program its tester-solved per-channel trim into the frontend
+            # params (variation/calibrate.py) — a fleet of distinct
+            # calibrated sensors is a set of engines with distinct chip_ids
+            # and artifacts sharing the same weights
+            from repro.variation.calibrate import apply_calibration
+            params = {**params,
+                      "p2m": apply_calibration(params["p2m"], calibration)}
         if mesh is not None:
             # model + frontend params are small — replicate once, serve many
             params = jax.device_put(params, NamedSharding(mesh, P()))

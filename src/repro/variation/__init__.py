@@ -1,0 +1,32 @@
+"""Device-variation & calibration subsystem (DESIGN.md §7).
+
+Every deployed P2M sensor is a *sampled* chip: per-MTJ switching-logit and
+R_P/TMR corners, per-channel pixel gain/offset mismatch, spatially
+correlated column noise. This package owns that model end to end:
+
+    chip.py            VariationConfig (frozen, jit-static) -> deterministic
+                       ChipMaps; kernel-facing channel operands; Fig. 8
+                       noise maps
+    calibrate.py       the tester's per-channel trim loop -> a calibration
+                       artifact that travels as ``params["cal_trim"]``
+    yield_analysis.py  vmapped Monte-Carlo fleet statistics + end-task
+                       accuracy vs sigma (calibrated / uncalibrated)
+
+``repro.frontend`` threads a chip through the ``device`` and ``pallas``
+backends via ``FrontendConfig(variation=..., chip_id=...)``; this package
+deliberately never imports ``repro.frontend`` at module scope (the frontend
+imports ``variation.chip``).
+"""
+from repro.variation.calibrate import (CalibrationArtifact, apply_calibration,
+                                       calibrate)
+from repro.variation.chip import (ChipMaps, VariationConfig, channel_operands,
+                                  identity_chip, identity_operands,
+                                  noise_maps, sample_chip)
+from repro.variation.yield_analysis import (accuracy_sweep, chip_stats,
+                                            read_margin, yield_sweep)
+
+__all__ = ["CalibrationArtifact", "ChipMaps", "VariationConfig",
+           "accuracy_sweep", "apply_calibration", "calibrate",
+           "channel_operands", "chip_stats", "identity_chip",
+           "identity_operands", "noise_maps", "read_margin", "sample_chip",
+           "yield_sweep"]

@@ -1,0 +1,121 @@
+"""Per-channel threshold-trim calibration — what a real chip programs at test.
+
+A fabricated P2M chip is calibrated once on the tester: known frames are
+exposed, the per-column activation rates are compared against the design
+target, and a per-column trim DAC (a small programmable offset on the
+subtractor, the same node the paper's threshold-matching V_OFS already
+drives — §2.2.2) is programmed to cancel the column's composite mismatch.
+
+This module reproduces that loop in simulation:
+
+    art = calibrate(params, p2m_cfg, vcfg, frames, chip_id=3)
+    params = apply_calibration(params, art)     # params["cal_trim"] = trim
+
+The measurement is the *expected* per-channel activation rate (analytic
+heterogeneous majority — no sampling noise in the tester loop), and the
+solver is a vectorized bisection on the trim: the activation rate is
+monotone increasing in an additive u-domain offset, so ``iters`` bisection
+steps pin each channel's trim to ``span / 2**iters`` conv-output units.
+
+The artifact travels as plain data (``params["cal_trim"]``): the ``device``
+backend adds it to the chip's u-offset and the ``pallas`` backend folds it
+into kernel B's per-channel operand rows, so a calibrated chip costs nothing
+extra at serve time (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hoyer, mtj, p2m, pixel
+from repro.variation.chip import (ChipMaps, VariationConfig, device_chain,
+                                  sample_chip)
+
+
+@dataclasses.dataclass
+class CalibrationArtifact:
+    """The per-chip correction a tester would program (plus its audit trail)."""
+    trim: jax.Array              # (C,) u-domain offset correction
+    rate_err_before: jax.Array   # (C,) |rate - target| of the raw chip
+    rate_err_after: jax.Array    # (C,) |rate - target| with the trim applied
+    chip_id: int = 0
+
+
+def _channel_rates(u: jax.Array, theta: jax.Array, chip: ChipMaps,
+                   trim: jax.Array, pcfg: p2m.P2MConfig) -> jax.Array:
+    """Expected per-channel activation rate of the chip at a given trim.
+
+    THE chain the ``device`` backend runs (``chip.device_chain`` — one
+    shared implementation, so the tester can never solve a trim for a
+    different chain than the one deployed), evaluated in expectation via
+    the heterogeneous majority instead of Bernoulli draws.
+    """
+    _, p_dev = device_chain(u, theta, chip, trim, pcfg.pixel, pcfg.mtj)
+    q = mtj.majority_prob_hetero(p_dev, pcfg.mtj.majority)
+    return jnp.mean(q, axis=tuple(range(q.ndim - 1)))        # (C,)
+
+
+def target_rates(u: jax.Array, theta: jax.Array,
+                 pcfg: p2m.P2MConfig) -> jax.Array:
+    """The design-target per-channel activation rates (the nominal chip)."""
+    v = pixel.conv_voltage(u, theta, pcfg.pixel)
+    p_sw = mtj.switching_probability(v, pcfg.mtj.write_pulse_ps, pcfg.mtj)
+    q = mtj.majority_prob_poly(p_sw, pcfg.mtj.n_redundant, pcfg.mtj.majority)
+    return jnp.mean(q, axis=tuple(range(q.ndim - 1)))        # (C,)
+
+
+def calibrate(params: Dict, pcfg: p2m.P2MConfig, vcfg: VariationConfig,
+              frames: jax.Array, chip_id: int = 0, *,
+              iters: int = 16, span: float = 2.0,
+              chip: Optional[ChipMaps] = None) -> CalibrationArtifact:
+    """Solve the per-channel trim of one chip on calibration frames.
+
+    ``params`` = ``{"w", "v_th"}`` (the deployed frontend weights — the trim
+    is solved for the network the chip will actually run); ``frames`` is a
+    representative (B, H, W, C) calibration batch in [0, 1]. The bisection
+    window is ``[-span, +span]`` conv-output units. Pass ``chip=`` to reuse
+    pre-sampled maps; otherwise the chip is re-sampled deterministically
+    from ``(vcfg, chip_id)``.
+    """
+    if chip is None:
+        chip = sample_chip(vcfg, pcfg.out_channels, pcfg.mtj.n_redundant,
+                           chip_id)
+    u = p2m.hardware_conv(frames, params["w"], pcfg)
+    theta = hoyer.effective_threshold(u, params["v_th"]) * params["v_th"]
+    ref = target_rates(u, theta, pcfg)
+
+    def rates(trim):
+        return _channel_rates(u, theta, chip, trim, pcfg)
+
+    c = pcfg.out_channels
+    lo = jnp.full((c,), -span)
+    hi = jnp.full((c,), span)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        under = rates(mid) < ref          # rate monotone increasing in trim
+        return jnp.where(under, mid, lo), jnp.where(under, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    trim = 0.5 * (lo + hi)
+    return CalibrationArtifact(
+        trim=trim,
+        rate_err_before=jnp.abs(rates(jnp.zeros((c,))) - ref),
+        rate_err_after=jnp.abs(rates(trim) - ref),
+        chip_id=int(chip_id))
+
+
+def apply_calibration(params: Dict,
+                      artifact: Optional[CalibrationArtifact]) -> Dict:
+    """Merge the programmed trim into a frontend param tree (pure).
+
+    Backends pick ``params["cal_trim"]`` up as the additional per-channel
+    u-offset; ``None`` returns the params unchanged (an uncalibrated chip).
+    """
+    if artifact is None:
+        return params
+    return {**params, "cal_trim": artifact.trim}

@@ -1,0 +1,259 @@
+"""Per-chip device-variation model: frozen config -> deterministic mismatch maps.
+
+The paper's framework "incorporates device and circuit constraints based on
+state-of-the-art fabricated VC-MTJ characteristics" — but a *fabricated* chip
+is never the nominal device: every one of the 8 x C MTJs sits at its own
+process corner and every pixel/subtractor column carries its own gain/offset
+mismatch. This module makes a deployed sensor chip a first-class object:
+
+    vcfg = VariationConfig(sigma_logit_offset=0.3, sigma_pixel_offset=0.1)
+    chip = sample_chip(vcfg, n_channels=32, n_redundant=8, chip_id=7)
+
+``VariationConfig`` is a frozen (hashable) dataclass, so it rides inside
+``FrontendConfig`` as a jit static; the *maps* are ordinary arrays sampled
+deterministically from ``(chip_seed, chip_id)`` — the same config and id
+always yields the same chip, which is what makes a calibration artifact
+meaningful across sessions (DESIGN.md §7).
+
+Mismatch families (all sigmas are respectively additive-in-logit, relative,
+or normalized-conv-output units; sigma = 0 samples the *exact* nominal chip):
+
+    mtj_logit_offset / mtj_logit_gain   per-MTJ (C, n) switching-logit offset
+                                        and slope spread — the VCMA-coefficient
+                                        / anisotropy corner of each device
+    r_p_scale / tmr_scale               per-MTJ (C, n) relative R_P / TMR
+                                        spread — the burst-read margin corner
+    pixel_gain                          per-channel (C,) transfer-curve gain
+                                        mismatch (applies to both integration
+                                        phases -> exactly ``gain * u``)
+    pixel_offset                        per-channel (C,) subtractor DC-offset
+                                        mismatch in normalized conv-output
+                                        units, INCLUDING the spatially
+                                        correlated column-noise component
+                                        (neighbouring MTJ columns share bias
+                                        rails — correlation length in columns)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mtj as mtj_model
+from repro.core import pixel as pixel_model
+
+
+@dataclasses.dataclass(frozen=True)
+class VariationConfig:
+    """Process-variation profile of a chip population (frozen -> jit static).
+
+    Sampling is deterministic in ``(chip_seed, chip_id)``; the sigmas select
+    the spread of each mismatch family. ``sigma=0`` for every family samples
+    the exact nominal chip (identity maps, bit-identical physics).
+    """
+    sigma_logit_offset: float = 0.0   # per-MTJ additive switching-logit offset
+    sigma_logit_slope: float = 0.0    # per-MTJ relative logit-slope spread
+    sigma_r_p: float = 0.0            # per-MTJ relative R_P spread
+    sigma_tmr: float = 0.0            # per-MTJ relative TMR spread
+    sigma_pixel_gain: float = 0.0     # per-channel curve-gain mismatch
+    sigma_pixel_offset: float = 0.0   # per-channel subtractor offset (norm units)
+    sigma_column: float = 0.0         # spatially-correlated column noise (norm units)
+    column_corr: float = 4.0          # column-noise correlation length (columns)
+    chip_seed: int = 0                # base seed; chip i folds i into it
+
+    @property
+    def enabled(self) -> bool:
+        """True when any mismatch family has non-zero spread."""
+        return any(s > 0.0 for s in (
+            self.sigma_logit_offset, self.sigma_logit_slope, self.sigma_r_p,
+            self.sigma_tmr, self.sigma_pixel_gain, self.sigma_pixel_offset,
+            self.sigma_column))
+
+    def scaled(self, s: float) -> "VariationConfig":
+        """The same profile with every sigma scaled by ``s`` (sweep axis)."""
+        return dataclasses.replace(
+            self,
+            sigma_logit_offset=self.sigma_logit_offset * s,
+            sigma_logit_slope=self.sigma_logit_slope * s,
+            sigma_r_p=self.sigma_r_p * s,
+            sigma_tmr=self.sigma_tmr * s,
+            sigma_pixel_gain=self.sigma_pixel_gain * s,
+            sigma_pixel_offset=self.sigma_pixel_offset * s,
+            sigma_column=self.sigma_column * s)
+
+
+class ChipMaps(NamedTuple):
+    """One sampled chip instance (a pytree of plain arrays — vmap-able)."""
+    mtj_logit_offset: jax.Array   # (C, n_redundant)
+    mtj_logit_gain: jax.Array     # (C, n_redundant)
+    r_p_scale: jax.Array          # (C, n_redundant)
+    tmr_scale: jax.Array          # (C, n_redundant)
+    pixel_gain: jax.Array         # (C,)
+    pixel_offset: jax.Array       # (C,)  incl. correlated column noise
+
+
+def _correlated_column_noise(key: jax.Array, n: int, sigma: float,
+                             corr: float) -> jax.Array:
+    """Unit-variance Gaussian noise, circularly smoothed to ``corr`` columns.
+
+    i.i.d. draws are convolved with a circular Gaussian kernel and re-scaled
+    to unit variance so ``sigma`` stays the per-column std regardless of the
+    correlation length (the smoothing only moves covariance off-diagonal).
+    """
+    eps = jax.random.normal(key, (n,))
+    r = max(int(3.0 * corr), 1)
+    d = jnp.arange(-r, r + 1, dtype=jnp.float32)
+    k = jnp.exp(-0.5 * (d / jnp.maximum(corr, 1e-6)) ** 2)
+    k = k / jnp.sqrt(jnp.sum(k ** 2))          # unit output variance
+    reps = -(-r // n)                          # circular wrap, any r vs n
+    ext = jnp.concatenate([eps] * (2 * reps + 1))
+    center = reps * n                          # ext[center:center+n] == eps
+    smooth = jnp.convolve(ext, k, mode="valid")
+    return sigma * jax.lax.dynamic_slice(smooth, (center - r,), (n,))
+
+
+def sample_chip(vcfg: VariationConfig, n_channels: int, n_redundant: int,
+                chip_id: jax.Array | int = 0) -> ChipMaps:
+    """Draw one deterministic chip instance.
+
+    Pure in ``(vcfg, n_channels, n_redundant, chip_id)`` — the same inputs
+    always return the same maps (re-sampling inside jit is free of side
+    effects, and ``chip_id`` may be a traced integer, so yield sweeps can
+    ``vmap`` over a fleet of chips). ``sigma=0`` families return exact
+    identity maps (zeros / ones).
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(vcfg.chip_seed), chip_id)
+    ks = jax.random.split(key, 7)
+    cn = (n_channels, n_redundant)
+    off = vcfg.sigma_logit_offset * jax.random.normal(ks[0], cn)
+    gain = 1.0 + vcfg.sigma_logit_slope * jax.random.normal(ks[1], cn)
+    r_p = 1.0 + vcfg.sigma_r_p * jax.random.normal(ks[2], cn)
+    tmr = 1.0 + vcfg.sigma_tmr * jax.random.normal(ks[3], cn)
+    pg = 1.0 + vcfg.sigma_pixel_gain * jax.random.normal(ks[4], (n_channels,))
+    po = vcfg.sigma_pixel_offset * jax.random.normal(ks[5], (n_channels,))
+    if vcfg.sigma_column > 0.0:
+        po = po + _correlated_column_noise(ks[6], n_channels,
+                                           vcfg.sigma_column, vcfg.column_corr)
+    # resistances and slopes are physical positives; clip the far tails
+    return ChipMaps(mtj_logit_offset=off,
+                    mtj_logit_gain=jnp.maximum(gain, 0.05),
+                    r_p_scale=jnp.maximum(r_p, 0.05),
+                    tmr_scale=jnp.maximum(tmr, 0.05),
+                    pixel_gain=jnp.maximum(pg, 0.05),
+                    pixel_offset=po)
+
+
+def identity_chip(n_channels: int, n_redundant: int) -> ChipMaps:
+    """The nominal chip (what every backend simulated before this subsystem)."""
+    cn = (n_channels, n_redundant)
+    return ChipMaps(mtj_logit_offset=jnp.zeros(cn),
+                    mtj_logit_gain=jnp.ones(cn),
+                    r_p_scale=jnp.ones(cn),
+                    tmr_scale=jnp.ones(cn),
+                    pixel_gain=jnp.ones((n_channels,)),
+                    pixel_offset=jnp.zeros((n_channels,)))
+
+
+# --- kernel-facing channel operands ------------------------------------------
+
+# rows of the (4, C) per-channel operand consumed by kernel B
+# (kernels/p2m_conv.py) and its oracle (kernels/ref.py)
+CHAN_U_GAIN = 0        # u        -> gain * u + offset   (pixel mismatch)
+CHAN_U_OFFSET = 1      #                                  + calibration trim
+CHAN_LOGIT_GAIN = 2    # logit    -> gain * logit + offset (MTJ corner,
+CHAN_LOGIT_OFFSET = 3  #             channel-aggregated over the n devices)
+CHAN_ROWS = 4
+
+
+def channel_operands(chip: ChipMaps,
+                     cal_trim: Optional[jax.Array] = None) -> jax.Array:
+    """Fold a chip into the (4, C) per-channel operand rows of kernel B.
+
+    The folded-majority kernel needs ONE effective device per channel, so the
+    per-MTJ logit maps are aggregated to their channel mean — the channel's
+    composite corner. (The ``device`` backend keeps the exact per-device
+    heterogeneous majority; at sigma = 0 both collapse to the nominal chip.)
+    ``cal_trim`` (C,) is the programmed calibration DAC value, added to the
+    u-offset row (variation/calibrate.py).
+    """
+    u_off = chip.pixel_offset
+    if cal_trim is not None:
+        u_off = u_off + cal_trim
+    return jnp.stack([chip.pixel_gain, u_off,
+                      jnp.mean(chip.mtj_logit_gain, axis=1),
+                      jnp.mean(chip.mtj_logit_offset, axis=1)]).astype(
+                          jnp.float32)
+
+
+def identity_operands(n_channels: int) -> jax.Array:
+    """The no-variation (4, C) rows — bit-exact pass-through in kernel B."""
+    z = jnp.zeros((n_channels,), jnp.float32)
+    o = jnp.ones((n_channels,), jnp.float32)
+    return jnp.stack([o, z, o, z])
+
+
+# --- the chip-perturbed device chain -----------------------------------------
+
+def device_chain(u: jax.Array, theta: jax.Array, chip: ChipMaps,
+                 trim: Optional[jax.Array],
+                 pixel_params: pixel_model.PixelCircuitParams,
+                 mtj_params: mtj_model.MTJParams
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """u -> ``(v_conv, p_devices)`` at the chip's corners — the ONE
+    implementation of the perturbed analog chain.
+
+    pixel gain/offset (+ the programmed calibration trim) on u, the
+    threshold-matching voltage map, then each of the n redundant MTJs'
+    switching probability at its own logit corner: ``p_devices`` is
+    ``u.shape + (n,)``. Shared by the ``device`` backend (Bernoulli draws +
+    majority) and the calibration tester (expected rates via the
+    heterogeneous majority), so the trim is always solved for exactly the
+    chain the deployed backend runs (DESIGN.md §3 single-source rule).
+    """
+    u_eff = chip.pixel_gain * u + chip.pixel_offset
+    if trim is not None:
+        u_eff = u_eff + trim
+    v = pixel_model.conv_voltage(u_eff, theta, pixel_params)
+    p_dev = mtj_model.switching_probability(
+        v[..., None], mtj_params.write_pulse_ps, mtj_params,
+        logit_offset=chip.mtj_logit_offset, logit_gain=chip.mtj_logit_gain)
+    return v, p_dev
+
+
+# --- Fig. 8 noise maps -------------------------------------------------------
+
+def noise_maps(chip: ChipMaps,
+               mtj_params: mtj_model.MTJParams = mtj_model.DEFAULT_MTJ,
+               pixel_params: pixel_model.PixelCircuitParams =
+               pixel_model.DEFAULT_PIXEL) -> Tuple[jax.Array, jax.Array]:
+    """Per-channel (p_fail, p_false) maps for Fig. 8 noise injection.
+
+    The paper's robustness study flips activation bits with i.i.d. scalar
+    probabilities; a sampled chip supplies the *spatial* version: each
+    channel's fail / false-activation probability is its own heterogeneous
+    majority error at the paper's Fig. 5 operating points (should-switch at
+    the 0.8 V measured point, should-not at 0.7 V), with the channel's pixel
+    mismatch shifting its effective operating voltage. Returns two (C,)
+    arrays the ``analog`` backend broadcasts over the activation map.
+    """
+    v_on = mtj_params.measured_voltages[1]
+    v_off = mtj_params.measured_voltages[0]
+    v_sw = pixel_params.v_sw
+    vpu = pixel_params.volts_per_unit
+    # channel-effective operating voltages: the pixel gain scales the margin
+    # to the switching voltage, the offset shifts it (in volts)
+    dv = vpu * chip.pixel_offset
+    v_on_eff = v_sw + chip.pixel_gain * (v_on - v_sw) + dv     # (C,)
+    v_off_eff = v_sw + chip.pixel_gain * (v_off - v_sw) + dv   # (C,)
+    p_on = mtj_model.switching_probability(
+        v_on_eff[:, None], mtj_params.write_pulse_ps, mtj_params,
+        logit_offset=chip.mtj_logit_offset, logit_gain=chip.mtj_logit_gain)
+    p_off = mtj_model.switching_probability(
+        v_off_eff[:, None], mtj_params.write_pulse_ps, mtj_params,
+        logit_offset=chip.mtj_logit_offset, logit_gain=chip.mtj_logit_gain)
+    maj = mtj_params.majority
+    p_fail = 1.0 - mtj_model.majority_prob_hetero(p_on, maj)
+    p_false = mtj_model.majority_prob_hetero(p_off, maj)
+    return p_fail, p_false

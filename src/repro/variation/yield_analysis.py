@@ -1,0 +1,189 @@
+"""Monte-Carlo yield analysis over sampled chips (the Fig. 5/8 story under
+process variation).
+
+The paper's Fig. 5 shows the 8-MTJ majority pushing both activation-error
+modes below 0.1% — for the *nominal* device. This module asks the production
+question: over a population of sampled chips, what fraction still meets that
+spec, and what does the end task lose?
+
+    rows = yield_sweep(vcfg, sigmas=(0.5, 1.0, 2.0), n_chips=64, ...)
+
+Per sigma point the sweep vmaps the analytic chip statistics over a fleet of
+deterministically sampled chips (no Python loop over devices) and reports:
+
+    fail_rate / false_rate   mean + worst per-channel majority error over the
+                             fleet (Fig. 5 under mismatch)
+    read_margin_mv           worst burst-read sense margin (R_P/TMR spread)
+    yield_fraction           chips whose worst channel meets ``error_budget``
+                             AND whose every device still reads correctly
+
+``accuracy_sweep`` closes the loop end-to-end: it runs a trained model
+through the ``device`` backend on sampled chips — calibrated and not — and
+reports task accuracy vs sigma (benchmarks/variation_bench.py writes it to
+BENCH_variation.json).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mtj as mtj_model
+from repro.variation import chip as chip_mod
+from repro.variation.chip import VariationConfig, sample_chip
+
+
+def read_margin(chip: chip_mod.ChipMaps,
+                mtj_params: mtj_model.MTJParams = mtj_model.DEFAULT_MTJ,
+                r_load: float = 6.0e3) -> jax.Array:
+    """Per-device burst-read sense margin (volts), negative = misread.
+
+    The comparator threshold is fixed at the *nominal* mid-point (a chip has
+    one comparator reference, not one per device); each device's P / AP
+    divider levels move with its R_P / TMR corner. The margin is the smaller
+    of (V_P - thr) and (thr - V_AP): the distance to the first read error.
+    """
+    thr = mtj_model.comparator_threshold(mtj_params, r_load)
+    v_p = mtj_model.read_voltage_divider(
+        jnp.ones(()), mtj_params, r_load,
+        r_p_scale=chip.r_p_scale, tmr_scale=chip.tmr_scale)
+    v_ap = mtj_model.read_voltage_divider(
+        jnp.zeros(()), mtj_params, r_load,
+        r_p_scale=chip.r_p_scale, tmr_scale=chip.tmr_scale)
+    return jnp.minimum(v_p - thr, thr - v_ap)                # (C, n)
+
+
+def trimmed_chip(chip: chip_mod.ChipMaps) -> chip_mod.ChipMaps:
+    """The chip as the tester leaves it: the per-channel trim DAC cancels
+    the channel-level offset families — the subtractor offset (incl. the
+    correlated column noise) and the channel-MEAN MTJ logit offset (an
+    additive logit shift common to a channel's n devices is equivalent to a
+    voltage offset the trim absorbs). Per-device residuals and the gain /
+    slope / resistance spreads remain: offsets can be trimmed, spreads
+    cannot (variation/calibrate.py solves the actual trim; this is its
+    idealized endpoint for the analytic fleet statistics)."""
+    return chip._replace(
+        pixel_offset=jnp.zeros_like(chip.pixel_offset),
+        mtj_logit_offset=chip.mtj_logit_offset
+        - jnp.mean(chip.mtj_logit_offset, axis=1, keepdims=True))
+
+
+def chip_stats(vcfg: VariationConfig, chip_id: jax.Array | int,
+               n_channels: int,
+               mtj_params: mtj_model.MTJParams = mtj_model.DEFAULT_MTJ,
+               r_load: float = 6.0e3) -> Dict[str, jax.Array]:
+    """Analytic spec numbers of one sampled chip (traced; vmap over chip_id).
+
+    Reported both raw and with the idealized calibration trim applied
+    (``*_cal`` keys) — the margin recovery the trim buys is the headline of
+    the yield story. Read margins are trim-independent (the read path never
+    sees the subtractor)."""
+    chip = sample_chip(vcfg, n_channels, mtj_params.n_redundant, chip_id)
+    p_fail, p_false = chip_mod.noise_maps(chip, mtj_params)
+    p_fail_c, p_false_c = chip_mod.noise_maps(trimmed_chip(chip), mtj_params)
+    margin = read_margin(chip, mtj_params, r_load)
+    return {"fail_worst": jnp.max(p_fail), "fail_mean": jnp.mean(p_fail),
+            "false_worst": jnp.max(p_false), "false_mean": jnp.mean(p_false),
+            "fail_worst_cal": jnp.max(p_fail_c),
+            "false_worst_cal": jnp.max(p_false_c),
+            "read_margin_min": jnp.min(margin)}
+
+
+def yield_sweep(vcfg: VariationConfig, sigmas: Sequence[float],
+                n_chips: int, n_channels: int,
+                mtj_params: mtj_model.MTJParams = mtj_model.DEFAULT_MTJ,
+                *, error_budget: float = 1e-3,
+                r_load: float = 6.0e3) -> List[Dict[str, float]]:
+    """Vmapped Monte-Carlo fleet statistics at each sigma scale.
+
+    ``sigmas`` scale the whole ``vcfg`` profile (``VariationConfig.scaled``);
+    at each point ``n_chips`` chips are sampled deterministically (ids
+    0..n-1 — the fleet is reproducible) and their spec numbers reduced. A
+    chip yields when its worst channel keeps both Fig. 5 error modes under
+    ``error_budget`` and every device's read margin stays positive.
+    """
+    rows: List[Dict[str, float]] = []
+    ids = jnp.arange(n_chips)
+    for s in sigmas:
+        v = vcfg.scaled(float(s))
+        stats = jax.vmap(
+            lambda cid: chip_stats(v, cid, n_channels, mtj_params, r_load)
+        )(ids)
+        read_ok = stats["read_margin_min"] > 0.0
+        ok = ((stats["fail_worst"] < error_budget)
+              & (stats["false_worst"] < error_budget) & read_ok)
+        ok_cal = ((stats["fail_worst_cal"] < error_budget)
+                  & (stats["false_worst_cal"] < error_budget) & read_ok)
+        rows.append({
+            "sigma_scale": float(s),
+            "yield_fraction": float(jnp.mean(ok.astype(jnp.float32))),
+            "yield_fraction_calibrated": float(
+                jnp.mean(ok_cal.astype(jnp.float32))),
+            "fail_worst": float(jnp.max(stats["fail_worst"])),
+            "fail_mean": float(jnp.mean(stats["fail_mean"])),
+            "false_worst": float(jnp.max(stats["false_worst"])),
+            "false_mean": float(jnp.mean(stats["false_mean"])),
+            "fail_worst_cal": float(jnp.max(stats["fail_worst_cal"])),
+            "false_worst_cal": float(jnp.max(stats["false_worst_cal"])),
+            "read_margin_min_mv": float(jnp.min(stats["read_margin_min"]))
+            * 1e3,
+        })
+    return rows
+
+
+def accuracy_sweep(params, vis_cfg, batches: Iterable[Dict], *,
+                   vcfg: VariationConfig, sigmas: Sequence[float],
+                   n_chips: int, calibration_frames: Optional[jax.Array],
+                   key: jax.Array, cal_iters: int = 12
+                   ) -> List[Dict[str, float]]:
+    """End-task accuracy vs sigma, calibrated and uncalibrated.
+
+    For each sigma scale and chip id the model is evaluated through the
+    ``device`` backend (full per-MTJ Monte-Carlo on that chip); when
+    ``calibration_frames`` is given the same chip is also evaluated with its
+    solved trim programmed (variation/calibrate.py). ``batches`` is a list of
+    ``{"image", "label"}`` eval batches (reused across chips so the
+    comparison is paired). Deferred imports keep repro.variation import-light
+    (models -> frontend -> variation.chip must not cycle).
+    """
+    import dataclasses as _dc
+
+    from repro.models import vision
+    # NB: the package attribute ``repro.variation.calibrate`` is the
+    # *function* (re-exported in __init__) — import from the module directly
+    from repro.variation.calibrate import apply_calibration
+    from repro.variation.calibrate import calibrate as solve_trim
+
+    batches = list(batches)
+    rows: List[Dict[str, float]] = []
+    for s in sigmas:
+        v = vcfg.scaled(float(s))
+        accs: Dict[str, List[float]] = {"uncal": [], "cal": []}
+        for cid in range(n_chips):
+            cfg_chip = _dc.replace(vis_cfg, variation=v, chip_id=cid)
+            variants = {"uncal": params}
+            if calibration_frames is not None:
+                art = solve_trim(params["p2m"], vis_cfg.p2m, v,
+                                 calibration_frames, chip_id=cid,
+                                 iters=cal_iters)
+                variants["cal"] = {
+                    **params,
+                    "p2m": apply_calibration(params["p2m"], art)}
+            for tag, pp in variants.items():
+                correct = total = 0
+                for j, b in enumerate(batches):
+                    k = jax.random.fold_in(key, (cid * 997 + j) * 2
+                                           + (tag == "cal"))
+                    logits, _, _ = vision.forward(pp, b["image"], cfg_chip,
+                                                  backend="device", key=k)
+                    correct += int(jnp.sum(jnp.argmax(logits, -1)
+                                           == b["label"]))
+                    total += int(b["label"].shape[0])
+                accs[tag].append(correct / total)
+        row = {"sigma_scale": float(s),
+               "acc_uncalibrated": sum(accs["uncal"]) / len(accs["uncal"])}
+        if accs["cal"]:
+            row["acc_calibrated"] = sum(accs["cal"]) / len(accs["cal"])
+        rows.append(row)
+    return rows

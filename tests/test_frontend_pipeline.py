@@ -160,7 +160,7 @@ class TestKernelParity:
         theta = hoyer.effective_threshold(u, params["v_th"]) * params["v_th"]
         np.testing.assert_allclose(float(aux["theta"]), float(theta),
                                    rtol=1e-5)
-        shadow = _v_conv_stats(u, theta, pcfg.pixel)
+        shadow = _v_conv_stats(pixel.conv_voltage(u, theta, pcfg.pixel))
         for k, v in shadow.items():
             np.testing.assert_allclose(float(aux[k]), float(v), rtol=1e-4,
                                        err_msg=k)

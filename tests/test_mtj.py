@@ -72,6 +72,85 @@ class TestMajority:
         assert abs(float(jnp.mean(acts)) - analytic) < 0.01
 
 
+class TestMajorityFoldEquivalence:
+    """The single-source majority folds the variation kernels lean on:
+    the kernel-safe polynomial must be the SAME function as the gammaln
+    binomial tail, everywhere on [0, 1] including the exact endpoints."""
+
+    @pytest.mark.parametrize("n", [4, 8, 16])
+    def test_poly_equals_binomial_tail_on_grid(self, n):
+        m = n // 2
+        ps = jnp.asarray(np.linspace(0.0, 1.0, 41))
+        poly = mtj.majority_prob_poly(ps, n, m)
+        tail = mtj.majority_activation_probability(ps, n, m)
+        np.testing.assert_allclose(np.asarray(poly), np.asarray(tail),
+                                   atol=2e-6)
+
+    @pytest.mark.parametrize("n", [4, 8, 16])
+    def test_poly_exact_at_endpoints(self, n):
+        """multiply/add only — exact 0 and 1 at p in {0, 1} (the gammaln
+        path clips p to eps and can only be approximately right there)."""
+        m = n // 2
+        assert float(mtj.majority_prob_poly(jnp.asarray(0.0), n, m)) == 0.0
+        assert float(mtj.majority_prob_poly(jnp.asarray(1.0), n, m)) == 1.0
+
+    @given(p=st.floats(0.0, 1.0), n=st.integers(2, 16))
+    @settings(max_examples=60, deadline=None)
+    def test_poly_equals_binomial_tail_property(self, p, n):
+        m = max(1, n // 2)
+        a = float(mtj.majority_prob_poly(jnp.asarray(p), n, m))
+        b = float(mtj.majority_activation_probability(jnp.asarray(p), n, m))
+        assert abs(a - b) < 5e-6
+
+
+class TestPulseEnvelopeEdges:
+    def test_envelope_zero_at_zero_and_full_period(self):
+        assert float(mtj.pulse_envelope(0.0, 1400.0)) == 0.0
+        np.testing.assert_allclose(
+            float(mtj.pulse_envelope(1400.0, 1400.0)), 0.0, atol=1e-12)
+
+    def test_envelope_peaks_at_odd_half_periods(self):
+        for k in (1, 3):
+            np.testing.assert_allclose(
+                float(mtj.pulse_envelope(k * 700.0, 1400.0)), 1.0, atol=1e-6)
+
+    def test_envelope_symmetric_about_half_period(self):
+        for dt in (50.0, 200.0, 333.0):
+            np.testing.assert_allclose(
+                float(mtj.pulse_envelope(700.0 - dt, 1400.0)),
+                float(mtj.pulse_envelope(700.0 + dt, 1400.0)), rtol=1e-6)
+
+    def test_envelope_bounded_01(self):
+        t = jnp.linspace(0.0, 5600.0, 257)
+        env = np.asarray(mtj.pulse_envelope(t, 1400.0))
+        assert env.min() >= 0.0 and env.max() <= 1.0 + 1e-7
+
+    def test_reset_probability_edges(self):
+        """The reset pulse sits at the envelope peak BY CONSTRUCTION
+        (500 ps = half the 1000 ps reset precession period), so the reset
+        probability is pure sigmoid(logit(0.9 V)) — near-deterministic."""
+        prm = mtj.DEFAULT_MTJ
+        np.testing.assert_allclose(
+            float(mtj.pulse_envelope(prm.reset_pulse_ps,
+                                     prm.reset_precession_period_ps)),
+            1.0, atol=1e-12)
+        p_reset = float(mtj.reset_probability())
+        expected = float(jax.nn.sigmoid(mtj.switching_logit(
+            jnp.asarray(prm.reset_voltage))))
+        np.testing.assert_allclose(p_reset, expected, rtol=1e-7)
+        assert p_reset > 0.97
+
+    def test_half_width_pulse_halves_nothing_silently(self):
+        """Envelope normalisation: switching_probability at the nominal
+        write pulse equals the raw voltage fit, shorter pulses only reduce
+        it (clip keeps the ratio <= 1)."""
+        v = jnp.asarray(0.85)
+        p_nom = float(mtj.switching_probability(v, 700.0))
+        raw = float(jax.nn.sigmoid(mtj.switching_logit(v)))
+        np.testing.assert_allclose(p_nom, raw, rtol=1e-6)
+        assert float(mtj.switching_probability(v, 250.0)) < p_nom
+
+
 class TestBurstRead:
     def test_tmr_exceeds_150_percent(self):
         prm = mtj.DEFAULT_MTJ

@@ -1,0 +1,429 @@
+"""Device-variation & calibration subsystem tests (DESIGN.md §7).
+
+Covers the acceptance criteria of the variation PR:
+  * sigma = 0 leaves the device/pallas backends bit-identical to the
+    no-variation path (the threading is a true pass-through),
+  * sigma > 0 pallas kernel B matches its oracle bit-exactly in interpret
+    mode including non-default per-channel operand maps (under jit — both
+    sides see the same XLA FMA contraction),
+  * chip sampling is deterministic in (config, chip_id),
+  * the calibration loop measurably recovers per-channel activation rates,
+  * yield analysis degrades sensibly with sigma,
+  * burst_read forwards r_load to divider AND threshold consistently.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import frontend
+from repro.core import mtj, p2m, pixel
+from repro.kernels import ops, ref
+from repro.kernels import p2m_conv as pk
+from repro.variation import (CalibrationArtifact, VariationConfig,
+                             apply_calibration, calibrate, channel_operands,
+                             identity_chip, identity_operands, noise_maps,
+                             read_margin, sample_chip, yield_sweep)
+
+CFG = p2m.P2MConfig()
+
+PROFILE = VariationConfig(sigma_logit_offset=0.5, sigma_logit_slope=0.1,
+                          sigma_r_p=0.08, sigma_tmr=0.08,
+                          sigma_pixel_gain=0.1, sigma_pixel_offset=0.3,
+                          sigma_column=0.2)
+
+
+def _setup(seed=0, b=2, hw=32):
+    params = p2m.init_params(jax.random.PRNGKey(seed), CFG)
+    frame = jax.random.uniform(jax.random.PRNGKey(seed + 1), (b, hw, hw, 3))
+    return params, frame
+
+
+class TestChipSampling:
+    def test_deterministic_in_config_and_id(self):
+        a = sample_chip(PROFILE, 32, 8, chip_id=5)
+        b = sample_chip(PROFILE, 32, 8, chip_id=5)
+        for xa, xb in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+    def test_distinct_chips_differ(self):
+        a = sample_chip(PROFILE, 32, 8, chip_id=0)
+        b = sample_chip(PROFILE, 32, 8, chip_id=1)
+        assert float(jnp.max(jnp.abs(a.mtj_logit_offset
+                                     - b.mtj_logit_offset))) > 0
+
+    def test_sigma_zero_is_exact_identity(self):
+        chip = sample_chip(VariationConfig(), 16, 8, chip_id=9)
+        ident = identity_chip(16, 8)
+        for got, want in zip(chip, ident):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_shapes(self):
+        chip = sample_chip(PROFILE, 16, 4, chip_id=0)
+        assert chip.mtj_logit_offset.shape == (16, 4)
+        assert chip.r_p_scale.shape == (16, 4)
+        assert chip.pixel_gain.shape == (16,)
+        assert chip.pixel_offset.shape == (16,)
+
+    def test_column_noise_is_spatially_correlated(self):
+        """Neighbouring columns must co-vary (correlation length > 1 col)."""
+        vcfg = VariationConfig(sigma_column=1.0, column_corr=8.0)
+        lags = []
+        for cid in range(24):
+            po = np.asarray(sample_chip(vcfg, 128, 8, cid).pixel_offset)
+            po = po - po.mean()
+            lags.append((po[:-1] * po[1:]).mean() / (po * po).mean())
+        assert np.mean(lags) > 0.5   # corr=8 -> lag-1 autocorr ~ exp(-1/128)
+
+    def test_column_noise_std_matches_sigma(self):
+        vcfg = VariationConfig(sigma_column=0.5, column_corr=2.0)
+        po = np.concatenate([
+            np.asarray(sample_chip(vcfg, 64, 8, cid).pixel_offset)
+            for cid in range(64)])
+        assert abs(po.std() - 0.5) < 0.1
+
+    def test_scaled_profile(self):
+        s = PROFILE.scaled(2.0)
+        assert s.sigma_logit_offset == pytest.approx(1.0)
+        assert s.sigma_column == pytest.approx(0.4)
+        assert s.column_corr == PROFILE.column_corr   # not a sigma
+        assert not VariationConfig().enabled and PROFILE.enabled
+
+
+class TestPhysicsHooks:
+    def test_switching_logit_offset_gain_broadcast(self):
+        v = jnp.linspace(0.6, 1.0, 5)[:, None]          # (5, 1)
+        off = jnp.asarray([-1.0, 0.0, 2.0])             # (3,)
+        base = mtj.switching_logit(v)
+        got = mtj.switching_logit(v, logit_offset=off, logit_gain=2.0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(2.0 * base + off),
+                                   rtol=1e-6)
+
+    def test_default_hooks_are_noops(self):
+        v = jnp.linspace(0.0, 1.2, 33)
+        np.testing.assert_array_equal(
+            np.asarray(mtj.switching_probability(v)),
+            np.asarray(mtj.switching_probability(v, logit_offset=0.0,
+                                                 logit_gain=1.0)))
+
+    def test_get_curve_gain_offset(self):
+        x = jnp.linspace(-3, 3, 64).reshape(8, 8)
+        g0 = pixel.get_curve("gf22_tanh")
+        gain = jnp.linspace(0.8, 1.2, 8)
+        g1 = pixel.get_curve("gf22_tanh", gain=gain, offset=0.25)
+        np.testing.assert_allclose(np.asarray(g1(x)),
+                                   np.asarray(gain * g0(x) + 0.25), rtol=1e-6)
+        # None/None returns the registered closure untouched
+        np.testing.assert_array_equal(
+            np.asarray(pixel.get_curve("gf22_tanh")(x)), np.asarray(g0(x)))
+
+    def test_hardware_conv_curve_gain_is_channelwise_u_gain(self):
+        """A per-channel curve gain applied to BOTH phases is exactly
+        gain * u — the identity the kernel-B u-gain row relies on."""
+        params, frame = _setup(seed=3)
+        gain = jnp.linspace(0.7, 1.3, CFG.out_channels)
+        u = p2m.hardware_conv(frame, params["w"], CFG)
+        ug = p2m.hardware_conv(frame, params["w"], CFG, curve_gain=gain)
+        np.testing.assert_allclose(np.asarray(ug), np.asarray(gain * u),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_hardware_conv_out_offset(self):
+        params, frame = _setup(seed=4)
+        off = jnp.linspace(-0.2, 0.2, CFG.out_channels)
+        u = p2m.hardware_conv(frame, params["w"], CFG)
+        uo = p2m.hardware_conv(frame, params["w"], CFG, out_offset=off)
+        np.testing.assert_allclose(np.asarray(uo), np.asarray(u + off),
+                                   rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("n", [4, 8, 16])
+    def test_majority_hetero_reduces_to_poly(self, n):
+        """Homogeneous devices: the Poisson-binomial DP equals the single
+        source binomial polynomial (incl. exact endpoints)."""
+        ps = jnp.asarray(np.linspace(0.0, 1.0, 21))
+        poly = mtj.majority_prob_poly(ps, n, n // 2)
+        het = mtj.majority_prob_hetero(
+            jnp.broadcast_to(ps[:, None], (ps.shape[0], n)), n // 2)
+        np.testing.assert_allclose(np.asarray(het), np.asarray(poly),
+                                   atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(het[0]), 0.0)
+        np.testing.assert_array_equal(np.asarray(het[-1]), 1.0)
+
+    def test_majority_hetero_orders_sensibly(self):
+        """One dead device out of 8 must lower the majority probability."""
+        p_ok = jnp.full((8,), 0.924)
+        p_one_dead = p_ok.at[3].set(0.0)
+        assert (float(mtj.majority_prob_hetero(p_one_dead, 4))
+                < float(mtj.majority_prob_hetero(p_ok, 4)))
+
+    def test_per_device_sampler_matches_homogeneous_sampler(self):
+        """Broadcast per-device probs + same key == the original sampler."""
+        key = jax.random.PRNGKey(3)
+        p = jax.random.uniform(jax.random.PRNGKey(4), (17, 5))
+        a = mtj.sample_majority_activation(key, p, 8, 4)
+        b = mtj.sample_majority_activation_per_device(
+            key, jnp.broadcast_to(p[..., None], p.shape + (8,)), 4)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestBackendRegression:
+    """Acceptance: sigma = 0 is bit-identical; sigma > 0 matches the oracle."""
+
+    @pytest.mark.parametrize("mode", ["device", "pallas", "analog", "ideal"])
+    def test_sigma_zero_bit_identical(self, mode):
+        params, frame = _setup(seed=5)
+        key = jax.random.PRNGKey(6)
+        fe0 = frontend.SensorFrontend(frontend.FrontendConfig(p2m=CFG))
+        fe1 = frontend.SensorFrontend(frontend.FrontendConfig(
+            p2m=CFG, variation=VariationConfig(), chip_id=11))
+        a0, x0 = fe0(params, frame, key=key, mode=mode)
+        a1, x1 = fe1(params, frame, key=key, mode=mode)
+        np.testing.assert_array_equal(np.asarray(a0), np.asarray(a1))
+        for k in x0:
+            np.testing.assert_array_equal(np.asarray(x0[k]),
+                                          np.asarray(x1[k]))
+
+    def test_zero_trim_bit_identical(self):
+        """A programmed all-zero trim is a bit-exact no-op on both hardware
+        backends (the trim rides the u-offset row / u-offset add)."""
+        params, frame = _setup(seed=12)
+        key = jax.random.PRNGKey(13)
+        trimmed = {**params,
+                   "cal_trim": jnp.zeros((CFG.out_channels,))}
+        fe = frontend.SensorFrontend(frontend.FrontendConfig(p2m=CFG))
+        for mode in ("device", "pallas"):
+            a0, _ = fe(params, frame, key=key, mode=mode)
+            a1, _ = fe(trimmed, frame, key=key, mode=mode)
+            np.testing.assert_array_equal(np.asarray(a0), np.asarray(a1))
+
+    def test_pallas_kernel_b_matches_ref_with_nondefault_chan(self):
+        """Bit-exact kernel<->oracle parity incl. non-identity per-channel
+        offset/gain maps (interpret mode; both under jit so both see the
+        same FMA contraction of the new multiply-add)."""
+        params, frame = _setup(seed=7, b=1, hw=16)
+        wq = p2m.quantize_weights(params["w"], CFG.weight_bits)
+        patches = ops._pad_to(ops.im2col(frame, CFG.kernel_size, CFG.stride),
+                              1, 128)
+        wm = ops._pad_to(ops._pad_to(
+            wq.reshape(-1, CFG.out_channels), 0, 128), 1, 128)
+        bits = jax.random.bits(jax.random.PRNGKey(8),
+                               (patches.shape[0], 128), jnp.uint32)
+        u, hp = pk.p2m_phase_a_pallas(patches, wm, jnp.ones((1, 1)),
+                                      block_n=64)
+        theta = pk.combine_hoyer_partials(hp, jnp.asarray(1.0))
+        chip = sample_chip(PROFILE, CFG.out_channels, 8, chip_id=5)
+        chan = ops._pad_to(
+            channel_operands(chip, jnp.linspace(-0.1, 0.1,
+                                                CFG.out_channels)), 1, 128)
+        kw = dict(n_valid=8 * 8, c_valid=CFG.out_channels, chan=chan,
+                  block_n=64)
+        ak, vk = jax.jit(lambda *a: pk.p2m_phase_b_pallas(*a, **kw))(
+            u, theta.reshape(1, 1), bits)
+        ar, vr = jax.jit(lambda *a: ref.p2m_phase_b_ref(*a, **kw))(
+            u, theta, bits)
+        np.testing.assert_array_equal(np.asarray(ak), np.asarray(ar))
+        np.testing.assert_array_equal(np.asarray(vk), np.asarray(vr))
+
+    def test_pallas_frontend_with_variation_matches_device_chain_rates(self):
+        """Statistical cross-check on a real chip: the channel-aggregated
+        pallas draw and the exact per-device Monte-Carlo agree on the
+        activation rate within MC error at moderate sigma."""
+        params, frame = _setup(seed=9, b=8)
+        vcfg = dataclasses.replace(PROFILE, sigma_logit_slope=0.05)
+        fe = frontend.SensorFrontend(frontend.FrontendConfig(
+            p2m=CFG, variation=vcfg, chip_id=2, global_shutter=False))
+        dev, _ = fe(params, frame, key=jax.random.PRNGKey(1), mode="device")
+        pal, _ = fe(params, frame, key=jax.random.PRNGKey(2), mode="pallas")
+        assert abs(float(jnp.mean(dev)) - float(jnp.mean(pal))) < 0.05
+
+    def test_variation_changes_hardware_outputs(self):
+        params, frame = _setup(seed=10)
+        key = jax.random.PRNGKey(11)
+        fe0 = frontend.SensorFrontend(frontend.FrontendConfig(p2m=CFG))
+        fev = frontend.SensorFrontend(frontend.FrontendConfig(
+            p2m=CFG, variation=PROFILE, chip_id=1))
+        for mode in ("device", "pallas"):
+            a0, _ = fe0(params, frame, key=key, mode=mode)
+            av, _ = fev(params, frame, key=key, mode=mode)
+            assert float(jnp.mean(jnp.abs(a0 - av))) > 0.0
+
+
+class TestAnalogVariationNoise:
+    def test_noise_maps_shapes_and_ranges(self):
+        chip = sample_chip(PROFILE, 32, 8, chip_id=3)
+        p_fail, p_false = noise_maps(chip)
+        assert p_fail.shape == (32,) and p_false.shape == (32,)
+        assert bool(jnp.all((p_fail >= 0) & (p_fail <= 1)))
+        assert bool(jnp.all((p_false >= 0) & (p_false <= 1)))
+
+    def test_nominal_chip_noise_is_fig5_error(self):
+        """Identity maps recover the paper's Fig. 5 operating-point errors
+        (both < 0.1% for 8 MTJs / majority 4)."""
+        p_fail, p_false = noise_maps(identity_chip(8, 8))
+        assert float(jnp.max(p_fail)) < 1e-3
+        assert float(jnp.max(p_false)) < 1e-3
+
+    def test_analog_draws_spatial_noise_from_chip(self):
+        """With variation set, the analog flips depend on the chip identity
+        (spatial maps), not on the scalar noise_p_* config."""
+        params, frame = _setup(seed=11)
+        key = jax.random.PRNGKey(12)
+        big = dataclasses.replace(PROFILE, sigma_logit_offset=2.0)
+        outs = []
+        for cid in (0, 1):
+            fe = frontend.SensorFrontend(frontend.FrontendConfig(
+                p2m=CFG, variation=big, chip_id=cid))
+            outs.append(fe(params, frame, key=key, mode="analog")[0])
+        # same key, same scalar config — only the chip differs
+        assert float(jnp.mean(jnp.abs(outs[0] - outs[1]))) > 0.0
+
+    def test_analog_scalar_noise_path_unchanged(self):
+        """Without variation the scalar Fig. 8 path still flips at the
+        CONFIGURED rates (measured against the noise-free output — this
+        would catch the flips being dropped or rescaled)."""
+        pcfg = dataclasses.replace(CFG, noise_p_fail=0.3, noise_p_false=0.1)
+        params, frame = _setup(seed=13, b=8)
+        key = jax.random.PRNGKey(14)
+        fe = frontend.SensorFrontend(frontend.FrontendConfig(p2m=pcfg))
+        clean, _ = fe(params, frame, mode="analog")           # no key: no flips
+        noisy, _ = fe(params, frame, key=key, mode="analog")
+        ones, zeros = np.asarray(clean) > 0.5, np.asarray(clean) < 0.5
+        fail_rate = float(1.0 - np.asarray(noisy)[ones].mean())
+        false_rate = float(np.asarray(noisy)[zeros].mean())
+        assert abs(fail_rate - 0.3) < 0.03
+        assert abs(false_rate - 0.1) < 0.03
+        o2, _ = fe(params, frame, key=key, mode="analog")     # per-key determinism
+        np.testing.assert_array_equal(np.asarray(noisy), np.asarray(o2))
+
+    def test_analog_combines_scalar_noise_with_chip_maps(self):
+        """An explicit Fig. 8 scalar study is NOT silently cancelled by a
+        variation profile: with a (near-)nominal chip the flip rates stay at
+        least the configured scalars (independent-source combination)."""
+        pcfg = dataclasses.replace(CFG, noise_p_fail=0.3, noise_p_false=0.1)
+        # a profile whose only spread is in the read path — its switching
+        # noise maps are ~nominal (tiny), so the scalars must dominate
+        vcfg = VariationConfig(sigma_r_p=0.05)
+        params, frame = _setup(seed=19, b=8)
+        fe = frontend.SensorFrontend(frontend.FrontendConfig(
+            p2m=pcfg, variation=vcfg))
+        clean, _ = fe(params, frame, mode="analog")
+        noisy, _ = fe(params, frame, key=jax.random.PRNGKey(20),
+                      mode="analog")
+        ones, zeros = np.asarray(clean) > 0.5, np.asarray(clean) < 0.5
+        assert abs(float(1.0 - np.asarray(noisy)[ones].mean()) - 0.3) < 0.03
+        assert abs(float(np.asarray(noisy)[zeros].mean()) - 0.1) < 0.03
+
+
+class TestCalibration:
+    def test_calibration_recovers_activation_rates(self):
+        params, frame = _setup(seed=14, b=4)
+        art = calibrate(params, CFG, PROFILE, frame, chip_id=2, iters=14)
+        before = float(jnp.mean(art.rate_err_before))
+        after = float(jnp.mean(art.rate_err_after))
+        assert after < 0.5 * before          # the trim buys back most of it
+        assert art.trim.shape == (CFG.out_channels,)
+
+    def test_calibration_of_nominal_chip_is_near_zero_trim(self):
+        """A nominal chip needs (almost) no trim: the bisection can only pin
+        it to its resolution, span * 2**-iters per channel."""
+        params, frame = _setup(seed=15, b=2)
+        art = calibrate(params, CFG, VariationConfig(), frame, iters=14,
+                        span=2.0)
+        resolution = 2.0 * 2.0 ** -14
+        assert float(jnp.max(jnp.abs(art.trim))) <= resolution * 1.01
+        assert float(jnp.max(art.rate_err_after)) < 1e-3
+
+    def test_apply_calibration(self):
+        params, _ = _setup(seed=16)
+        art = CalibrationArtifact(trim=jnp.ones((CFG.out_channels,)),
+                                  rate_err_before=jnp.zeros(()),
+                                  rate_err_after=jnp.zeros(()))
+        p2 = apply_calibration(params, art)
+        assert "cal_trim" in p2 and "cal_trim" not in params
+        np.testing.assert_array_equal(np.asarray(p2["cal_trim"]),
+                                      np.ones((CFG.out_channels,)))
+        assert apply_calibration(params, None) is params
+
+    def test_calibrated_chip_closer_to_nominal_output_rate(self):
+        """End-to-end through the frontend: programming the trim moves the
+        chip's activation rate toward the nominal chip's."""
+        params, frame = _setup(seed=17, b=4)
+        vcfg = VariationConfig(sigma_pixel_offset=0.5, sigma_column=0.3)
+        fe_nom = frontend.SensorFrontend(frontend.FrontendConfig(
+            p2m=CFG, global_shutter=False))
+        fe_chip = frontend.SensorFrontend(frontend.FrontendConfig(
+            p2m=CFG, variation=vcfg, chip_id=4, global_shutter=False))
+        key = jax.random.PRNGKey(18)
+        rate_nom = float(jnp.mean(fe_nom(params, frame, key=key,
+                                         mode="device")[0]))
+        rate_raw = float(jnp.mean(fe_chip(params, frame, key=key,
+                                          mode="device")[0]))
+        art = calibrate(params, CFG, vcfg, frame, chip_id=4, iters=14)
+        rate_cal = float(jnp.mean(fe_chip(apply_calibration(params, art),
+                                          frame, key=key, mode="device")[0]))
+        assert abs(rate_cal - rate_nom) < abs(rate_raw - rate_nom)
+
+
+class TestYieldAnalysis:
+    def test_nominal_population_yields_fully(self):
+        rows = yield_sweep(VariationConfig(), (1.0,), n_chips=4,
+                           n_channels=16)
+        assert rows[0]["yield_fraction"] == 1.0
+        assert rows[0]["fail_worst"] < 1e-3
+        assert rows[0]["read_margin_min_mv"] > 0
+
+    def test_yield_degrades_with_sigma(self):
+        rows = yield_sweep(PROFILE, (0.0, 4.0), n_chips=24, n_channels=32)
+        assert rows[0]["yield_fraction"] == 1.0
+        assert rows[1]["yield_fraction"] < rows[0]["yield_fraction"]
+        assert rows[1]["fail_worst"] > rows[0]["fail_worst"]
+
+    def test_read_margin_negative_under_extreme_spread(self):
+        chip = sample_chip(VariationConfig(sigma_r_p=0.9, sigma_tmr=0.9),
+                           32, 8, chip_id=0)
+        assert float(jnp.min(read_margin(chip))) < 0
+        nominal = read_margin(identity_chip(4, 8))
+        assert float(jnp.min(nominal)) > 0
+
+
+class TestBurstReadRLoad:
+    @pytest.mark.parametrize("r_load", [1.0e3, 6.0e3, 50.0e3])
+    def test_round_trip_any_r_load(self, r_load):
+        """Regression: the divider and the comparator threshold must see the
+        SAME r_load — before the fix a non-default load compared against the
+        default-load mid-point and could misread every bit."""
+        states = jax.random.bernoulli(
+            jax.random.PRNGKey(0), 0.5, (64, 32)).astype(jnp.float32)
+        out = mtj.burst_read(states, mtj.DEFAULT_MTJ, r_load)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(states))
+
+    def test_mismatched_r_load_would_fail(self):
+        """The failure mode the fix closes: divider at 50k vs threshold at
+        the 6k default actually misreads (sanity that the test above is
+        load-bearing)."""
+        states = jnp.asarray([1.0, 0.0])
+        v = mtj.read_voltage_divider(states, mtj.DEFAULT_MTJ, r_load=50.0e3)
+        bad = (v > mtj.comparator_threshold(mtj.DEFAULT_MTJ)).astype(
+            jnp.float32)
+        assert not np.array_equal(np.asarray(bad), np.asarray(states))
+
+
+class TestServingIntegration:
+    def test_vision_engine_accepts_calibration_artifact(self):
+        from repro.models import vision
+        from repro.serving.vision import VisionEngine
+        cfg = vision.VisionConfig(name="t", arch="vgg_tiny",
+                                  variation=PROFILE, chip_id=1,
+                                  frontend_backend="device")
+        params = vision.init_params(jax.random.PRNGKey(0), cfg)
+        frames = jax.random.uniform(jax.random.PRNGKey(1), (2, 32, 32, 3))
+        art = calibrate(params["p2m"], cfg.p2m, PROFILE, frames, chip_id=1,
+                        iters=8)
+        eng = VisionEngine(cfg, params, calibration=art)
+        assert "cal_trim" in eng.params["p2m"]
+        out = eng.classify(frames)
+        assert out["labels"].shape == (2,)
+        # an uncalibrated engine of the same chip differs only via the trim
+        eng0 = VisionEngine(cfg, params)
+        assert "cal_trim" not in eng0.params["p2m"]
