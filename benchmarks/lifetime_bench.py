@@ -1,0 +1,199 @@
+"""Sensor-lifetime benchmark -> BENCH_lifetime.json.
+
+The production question behind repro/lifetime (DESIGN.md §8): PR 3's fleet
+of sampled chips was calibrated once, at birth — but the chips age. Along
+the frame-clock axis this writes:
+
+    rate-error surfaces          vmapped fleet MC: per-channel activation
+      (stale vs refreshed trim)  rate error at each age
+    time-to-failure              fleet lifetime distribution at a rate-error
+                                 budget, stale vs refreshed
+    accuracy vs age              device-backend eval of a trained vgg_tiny on
+                                 aged chips: birth trim left stale vs a trim
+                                 re-solved at that age (what the
+                                 VisionEngine scheduler restores)
+    maintenance energy           pJ per trim refresh + energy-per-frame
+                                 including amortized recalibration upkeep
+
+Usage:
+    PYTHONPATH=src python benchmarks/lifetime_bench.py [--smoke] [--out F]
+
+``--smoke`` (CI): fewer chips / ages / eval batches — same JSON schema.
+Training stays at the full 800 steps (see variation_bench.py: device-backend
+accuracy only becomes meaningful there), so the smoke run is a few minutes.
+``--warnings-as-errors`` promotes any warning raised from the
+repro.lifetime package to an error (ci.sh sets it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import warnings
+
+# the t = 0 mismatch profile is single-sourced from the variation bench
+# (importable both as the ``benchmarks`` package and as a sibling script)
+try:
+    from benchmarks.variation_bench import BASE_PROFILE
+except ModuleNotFoundError:
+    from variation_bench import BASE_PROFILE
+
+# reference aging profile: dominated by the families a trim refresh can
+# re-cancel (subtractor-offset drift, channel-common VCMA logit drift, the
+# thermal common-mode excursion), with small untrimmable gain/slope/
+# resistance drifts and a slow retention fade. tau_frames sets the log-time
+# scale: aging factor 1 at ~1.7k frames, ~4.6 at 100k.
+DRIFT_PROFILE = dict(sigma_pixel_offset=0.12, sigma_logit_offset=0.20,
+                     sigma_pixel_gain=0.02, sigma_logit_gain=0.02,
+                     sigma_r_p=0.02, sigma_tmr=0.02,
+                     tmr_retention=0.005, pixel_gain_aging=0.005,
+                     tau_frames=1.0e3,
+                     temp_amplitude_c=15.0, temp_period_frames=3.0e4,
+                     temp_logit_per_c=-0.03)
+
+RATE_ERR_BUDGET = 0.05   # worst-channel activation-rate error spec
+
+
+def run(smoke: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import energy
+    from repro.data import ImageStream
+    from repro.lifetime import DriftConfig, accuracy_vs_age, \
+        rate_error_vs_age, time_to_failure
+    from repro.models import vision
+    from repro.train import vision as vision_loop
+    from repro.variation import VariationConfig
+
+    steps = 800
+    n_chips_mc = 8 if smoke else 48        # analytic fleet (vmapped, cheap)
+    n_chips_acc = 2 if smoke else 4        # device-backend eval (expensive)
+    eval_batches = 1 if smoke else 3
+    ages_mc = ((0.0, 1.0e3, 3.0e4, 3.0e5) if smoke
+               else (0.0, 3.0e2, 1.0e3, 1.0e4, 3.0e4, 1.0e5, 3.0e5, 1.0e6))
+    ages_acc = (0.0, 3.0e4, 3.0e5) if smoke else (0.0, 1.0e4, 1.0e5, 1.0e6)
+
+    # same training recipe as variation_bench (hoyer_coeff=1e-5: without it
+    # device-backend accuracy collapses even on the un-aged nominal chip)
+    cfg = vision.VisionConfig(name="lifetime_bench", arch="vgg_tiny",
+                              num_classes=10, hoyer_coeff=1e-5)
+    params = vision.init_params(jax.random.PRNGKey(0), cfg)
+    stream = ImageStream(hw=32, num_classes=10, global_batch=64)
+    params = vision_loop.fit(params, cfg, stream, steps, lr=3e-3,
+                             key=jax.random.PRNGKey(42))
+
+    ev = ImageStream(hw=32, num_classes=10, global_batch=64, seed=99)
+    batches = [ev.next_batch() for _ in range(eval_batches)]
+    cal_frames = ImageStream(hw=32, num_classes=10,
+                             global_batch=16 if smoke else 32,
+                             seed=7).next_batch()["image"]
+    vcfg = VariationConfig(**BASE_PROFILE)
+    dcfg = DriftConfig(**DRIFT_PROFILE)
+
+    # --- vmapped fleet: rate error + time-to-failure along the age axis
+    surf = rate_error_vs_age(params["p2m"], cfg.p2m, vcfg, dcfg, cal_frames,
+                             ages_mc, n_chips_mc, iters=12)
+    fleet_rows = [{
+        "age_frames": float(t),
+        "rate_err_stale_mean": float(surf["err_stale_mean"][:, i].mean()),
+        "rate_err_stale_worst": float(surf["err_stale_worst"][:, i].max()),
+        "rate_err_recal_mean": float(surf["err_recal_mean"][:, i].mean()),
+        "rate_err_recal_worst": float(surf["err_recal_worst"][:, i].max()),
+    } for i, t in enumerate(ages_mc)]
+    ttf = {
+        "stale": time_to_failure(surf["err_stale_worst"], ages_mc,
+                                 RATE_ERR_BUDGET),
+        "recalibrated": time_to_failure(surf["err_recal_worst"], ages_mc,
+                                        RATE_ERR_BUDGET),
+    }
+
+    # --- device-backend accuracy vs age, stale vs refreshed trim
+    acc_rows = accuracy_vs_age(params, cfg, batches, vcfg=vcfg, dcfg=dcfg,
+                               ages=ages_acc, n_chips=n_chips_acc,
+                               calibration_frames=cal_frames,
+                               key=jax.random.PRNGKey(11), cal_iters=12)
+
+    # --- maintenance energy at this frame geometry
+    spec = energy.FrameSpec(h_in=32, w_in=32, c_in=3, h_out=8, w_out=8,
+                            c_out=cfg.p2m.out_channels,
+                            kernel=cfg.p2m.kernel_size,
+                            stride=cfg.p2m.stride,
+                            n_mtj=cfg.p2m.mtj.n_redundant)
+    recal_pj = energy.recalibration_energy_pj(
+        spec, n_cal_frames=cal_frames.shape[0], bisection_iters=12)
+    recal_period = 1.0e4
+    e_frame = energy.frontend_energy_ours(spec)
+    e_maint = energy.maintenance_energy_per_frame_pj(
+        spec, recal_period_frames=recal_period,
+        n_cal_frames=cal_frames.shape[0], bisection_iters=12)
+
+    last = acc_rows[-1]
+    first = acc_rows[0]
+    lost = max(first["acc_stale"] - last["acc_stale"], 1e-9)
+    return {
+        "smoke": smoke, "train_steps": steps,
+        "n_chips_mc": n_chips_mc, "n_chips_acc": n_chips_acc,
+        "profile": BASE_PROFILE, "drift_profile": DRIFT_PROFILE,
+        "rate_err_budget": RATE_ERR_BUDGET,
+        "fleet_rows": fleet_rows, "time_to_failure": ttf,
+        "accuracy_rows": acc_rows,
+        # the headline: fraction of the aging loss the refresh buys back
+        "acc_lost_stale": lost,
+        "acc_recovered_by_recal": last["acc_recal"] - last["acc_stale"],
+        "recovery_fraction": (last["acc_recal"] - last["acc_stale"]) / lost,
+        "energy": {
+            "recalibration_pj": recal_pj,
+            "frontend_per_frame_pj": e_frame,
+            "recal_period_frames": recal_period,
+            "maintenance_per_frame_pj": e_maint,
+            "maintenance_overhead_fraction": e_maint / e_frame,
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer chips / ages / eval batches (CI); training "
+                         "stays at the full 800 steps")
+    ap.add_argument("--out", default="BENCH_lifetime.json")
+    ap.add_argument("--warnings-as-errors", action="store_true",
+                    help="fail on any warning raised from repro.lifetime")
+    args = ap.parse_args()
+    if args.warnings_as_errors:
+        warnings.filterwarnings("error", module=r"repro\.lifetime.*")
+    results = run(smoke=args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
+    for row in results["accuracy_rows"]:
+        print(f"  age {row['age_frames']:>9g}  acc stale "
+              f"{row['acc_stale']*100:5.1f}%  recal "
+              f"{row['acc_recal']*100:5.1f}%")
+    ttf = results["time_to_failure"]
+    print(f"  ttf p50 (frames): stale {ttf['stale']['ttf_frames_p50']:g} "
+          f"-> recal {ttf['recalibrated']['ttf_frames_p50']:g} "
+          f"(survivors {ttf['stale']['survivor_fraction']*100:.0f}% -> "
+          f"{ttf['recalibrated']['survivor_fraction']*100:.0f}%)")
+    print(f"  recovery fraction at horizon: "
+          f"{results['recovery_fraction']*100:5.1f}%  maintenance overhead "
+          f"{results['energy']['maintenance_overhead_fraction']*100:.2f}%")
+
+
+def bench_rows():
+    """(name, value, derived) rows for benchmarks/run.py (smoke scale)."""
+    r = run(smoke=True)
+    for row in r["accuracy_rows"]:
+        t = row["age_frames"]
+        yield f"lifetime_acc_stale_age{t:g}", row["acc_stale"], False
+        yield f"lifetime_acc_recal_age{t:g}", row["acc_recal"], False
+    for tag in ("stale", "recalibrated"):
+        yield (f"lifetime_ttf_p50_{tag}",
+               r["time_to_failure"][tag]["ttf_frames_p50"], False)
+    yield "lifetime_recovery_fraction", r["recovery_fraction"], True
+    yield ("lifetime_maintenance_overhead",
+           r["energy"]["maintenance_overhead_fraction"], True)
+
+
+if __name__ == "__main__":
+    main()

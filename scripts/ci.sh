@@ -3,8 +3,11 @@
 # throughput benchmark in smoke mode (writes BENCH_frontend.json so the
 # single-pass-vs-double-conv speedup is tracked on every run) + the
 # device-variation smoke sweep (small sigma, 2 chips, interpret mode;
-# writes BENCH_variation.json, with any warning raised from the
-# repro.variation package promoted to an error).
+# writes BENCH_variation.json) + the sensor-lifetime smoke sweep (small
+# fleet / age grid; writes BENCH_lifetime.json) — both benches promote any
+# warning raised from their package (repro.variation / repro.lifetime) to
+# an error. Long fleet Monte-Carlo tests are marked `slow` and excluded
+# from the tier-1 run (use `-m slow` to run them).
 # Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -14,3 +17,6 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/variation_bench.py --smoke --warnings-as-errors \
     --out BENCH_variation.json
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/lifetime_bench.py --smoke --warnings-as-errors \
+    --out BENCH_lifetime.json

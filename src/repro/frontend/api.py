@@ -20,6 +20,10 @@ with the standard aux keys:
     hoyer_loss   raw (un-scaled) Hoyer regularizer term — consumers apply
                  ``hoyer_coeff`` exactly once; 0 for non-training backends
     sparsity     fraction of zeros in the binary activation map
+    channel_rates
+                 (C,) per-channel activation rate of the emitted map — the
+                 live telemetry the lifetime scheduler monitors for
+                 drift-triggered recalibration (DESIGN.md §8)
     theta        the global hardware-mapped Hoyer threshold, in conv-output
                  units (for ``pallas`` it is combined from kernel-A partial
                  reductions rather than a shadow conv pass — DESIGN.md §5)
@@ -37,6 +41,7 @@ import dataclasses
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import p2m
 from repro.frontend import shutter
@@ -103,6 +108,9 @@ class FrontendConfig:
     # frontend simulates THIS sampled chip — the device/pallas backends
     # thread its mismatch maps through the physics and the analog backend
     # draws its Fig. 8 noise from them. None = the nominal (perfect) chip.
+    # At call time a ChipMaps pytree in params["chip"] overrides the
+    # config-sampled instance as an array operand (the lifetime subsystem's
+    # aged chip, DESIGN.md §8).
     variation: Optional[VariationConfig] = None
     chip_id: int = 0              # which chip of the population this is
     block_n: int = 512            # kernel-A patch-row block (the MXU matmul
@@ -138,4 +146,8 @@ class SensorFrontend:
                 acts, self.cfg.p2m.mtj, frames=acts.shape[0])
             aux = {**aux, **shutter_aux}
         aux["sparsity"] = p2m.output_sparsity(acts)
+        # per-channel activation rates of the map as READ OUT (post shutter
+        # on hardware backends) — the lifetime scheduler's monitoring signal
+        aux["channel_rates"] = jnp.mean(
+            acts, axis=tuple(range(acts.ndim - 1)))
         return acts, aux

@@ -26,6 +26,14 @@ a sampled chip instance; ``device`` runs it exactly per-device, ``pallas``
 folds it into kernel B's per-channel operand rows, ``analog`` draws its
 Fig. 8 flips from the chip's error maps. A programmed calibration trim
 travels as ``params["cal_trim"]`` (variation/calibrate.py).
+
+Lifetime (DESIGN.md §8): a chip that *ages* cannot be a jit static — so a
+``ChipMaps`` pytree riding in ``params["chip"]`` overrides the
+config-sampled chip as a plain ARRAY OPERAND. ``repro.serving.VisionEngine``
+evolves the maps per microbatch (lifetime/drift.py) and injects them here;
+because only array values change, the jitted step compiles exactly once for
+the whole life of the sensor. The ``ideal`` backend models no device at all
+and ignores the override (it is the algorithmic upper bound).
 """
 from __future__ import annotations
 
@@ -69,6 +77,22 @@ def _sampled_chip(cfg: FrontendConfig) -> Optional[chip_mod.ChipMaps]:
                                 cfg.p2m.mtj.n_redundant, cfg.chip_id)
 
 
+def _resolve_chip(cfg: FrontendConfig,
+                  params: dict) -> Optional[chip_mod.ChipMaps]:
+    """The chip this call simulates: ``params["chip"]`` wins over config.
+
+    The config-sampled chip is frozen at fabrication time (a jit static);
+    ``params["chip"]`` is the runtime override the lifetime subsystem uses
+    to thread an *aged* ``ChipMaps`` pytree through as array operands
+    (DESIGN.md §8) — the config-sampled instance is its t = 0 base.
+    """
+    chip = params.get("chip")
+    if chip is not None:
+        return (chip if isinstance(chip, chip_mod.ChipMaps)
+                else chip_mod.ChipMaps(*chip))
+    return _sampled_chip(cfg)
+
+
 def _ste_flip(o: jax.Array, key: jax.Array, p_fail, p_false) -> jax.Array:
     """Fig. 8 bit flips with a straight-through gradient (scalar or mapped
     probabilities — arrays broadcast against the activation map)."""
@@ -106,10 +130,11 @@ def analog_backend(cfg: FrontendConfig, params: dict, images: jax.Array,
     (fail, false) maps derived from each channel's heterogeneous majority
     error at the Fig. 5 operating points (spatial mismatch structure, not
     i.i.d. scalars), so variation-aware training sees the same chip the
-    hardware backends simulate.
+    hardware backends simulate. A ``params["chip"]`` override (the aged
+    chip of the lifetime subsystem) supplies those maps the same way.
     """
     pcfg = cfg.p2m
-    chip = _sampled_chip(cfg)
+    chip = _resolve_chip(cfg, params)
     u = p2m.hardware_conv(images, params["w"], pcfg)
     o, hl = hoyer.hoyer_spike(u, params["v_th"])
     if key is not None and chip is not None:
@@ -149,7 +174,7 @@ def device_backend(cfg: FrontendConfig, params: dict, images: jax.Array,
     if key is None:
         raise ValueError("the 'device' backend is stochastic — pass key=")
     pcfg = cfg.p2m
-    chip = _sampled_chip(cfg)
+    chip = _resolve_chip(cfg, params)
     trim = params.get("cal_trim")
     u = p2m.hardware_conv(images, params["w"], pcfg)
     theta = _theta(u, params["v_th"])
@@ -188,7 +213,7 @@ def pallas_backend(cfg: FrontendConfig, params: dict, images: jax.Array,
         raise ValueError("the 'pallas' backend is stochastic — pass key=")
     from repro.kernels import ops   # deferred: keep core import-light
     pcfg = cfg.p2m
-    chip = _sampled_chip(cfg)
+    chip = _resolve_chip(cfg, params)
     trim = params.get("cal_trim")
     chan = None
     if chip is not None or trim is not None:

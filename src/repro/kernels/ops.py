@@ -155,7 +155,10 @@ def p2m_frontend(images: jax.Array, w: jax.Array, v_th: jax.Array,
     operand for kernel B (``repro.variation.chip.channel_operands`` — pixel
     gain/offset + calibration trim + channel MTJ corner); ``None`` runs the
     nominal chip (identity rows, bit-exact pass-through). Padded channels get
-    zero rows, which keeps the padded lanes at u = 0 exactly.
+    zero rows, which keeps the padded lanes at u = 0 exactly. ``chan`` is a
+    traced operand (not in ``static_argnames``): a lifetime-aware caller
+    feeds a different aged-chip operand every microbatch against ONE
+    compilation of this function (DESIGN.md §8).
     """
     b, h, wd, c = images.shape
     cout = w.shape[-1]

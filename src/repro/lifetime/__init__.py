@@ -1,0 +1,36 @@
+"""Sensor-lifetime subsystem: drift/aging + self-recalibration (DESIGN.md §8).
+
+The temporal layer over ``repro/variation``: a deployed chip is a sampled
+instance (PR 3) that now also *ages*. This package owns that axis end to
+end:
+
+    drift.py     DriftConfig (frozen, jit-static rates) + per-chip
+                 DriftMaps -> ``evolve_chip(chip, maps, t)``: the chip at
+                 frame-clock age t, via the existing variation physics
+                 hooks. Time and maps are array operands — a streaming
+                 engine never recompiles as the chip ages.
+    schedule.py  SchedulePolicy (periodic / rate-error-triggered) +
+                 RecalibrationScheduler: monitors streamed channel rates,
+                 re-runs the variation tester loop against the aged chip,
+                 refreshes the programmed trim, charges maintenance energy.
+                 LifetimeState is the engine-side record of one aging chip.
+    fleet.py     vmapped fleet-lifetime Monte-Carlo: rate-error and
+                 accuracy vs age (stale vs refreshed trim), time-to-failure
+                 distributions. benchmarks/lifetime_bench.py writes
+                 BENCH_lifetime.json from it.
+
+``repro.serving.VisionEngine(drift=..., schedule=...)`` integrates the
+state machine into ``stream()``; this package never imports the engine
+(serving imports lifetime).
+"""
+from repro.lifetime.drift import (DriftConfig, DriftMaps, aging, evolve_chip,
+                                  sample_drift_maps, temp_excursion_c)
+from repro.lifetime.fleet import (accuracy_vs_age, rate_error_vs_age,
+                                  time_to_failure)
+from repro.lifetime.schedule import (LifetimeState, RecalibrationScheduler,
+                                     SchedulePolicy)
+
+__all__ = ["DriftConfig", "DriftMaps", "LifetimeState",
+           "RecalibrationScheduler", "SchedulePolicy", "accuracy_vs_age",
+           "aging", "evolve_chip", "rate_error_vs_age", "sample_drift_maps",
+           "temp_excursion_c", "time_to_failure"]

@@ -1,0 +1,196 @@
+"""Temporal drift / aging model: a sampled chip that is no longer frozen in
+time (DESIGN.md §8).
+
+PR 3 made a deployed sensor a *sampled chip instance* — but that chip never
+ages. Real VC-MTJ arrays do: VCMA-coefficient aging shifts the switching
+logit, retention loss relaxes the TMR window, pixel transfer curves fade,
+and ambient temperature moves the whole switching characteristic. This
+module is the time axis of `repro/variation`:
+
+    dcfg  = DriftConfig(sigma_pixel_offset=0.1, tau_frames=1e4)
+    maps  = sample_drift_maps(dcfg, n_channels, n_redundant, chip_id)
+    aged  = evolve_chip(chip, maps, t, dcfg=dcfg)     # t in frames, traced
+
+``DriftConfig`` is a frozen (hashable) dataclass — like ``VariationConfig``
+it can ride in a jit closure as a static. The *time* ``t`` and the drift
+direction maps are ordinary arrays: ``evolve_chip`` is pure jnp in them, so
+a streaming engine evolves the chip every microbatch without ever
+recompiling (the no-recompilation acceptance criterion of the lifetime
+subsystem — drift state enters as operands, never as statics).
+
+Drift families (each family's sigma is the magnitude reached at age
+``a(t) = log1p(t / tau_frames) = 1``, i.e. at t ≈ 1.72·tau — classic
+log-time aging, zero at t = 0):
+
+    sigma_logit_offset / sigma_logit_gain   per-MTJ VCMA-coefficient aging:
+                                            each device's switching logit
+                                            walks along its own sampled
+                                            direction
+    sigma_r_p / sigma_tmr                   per-MTJ resistance drift
+    tmr_retention                           deterministic retention loss —
+                                            every device's TMR window closes
+                                            by this fraction per age unit
+    sigma_pixel_gain / pixel_gain_aging     per-channel transfer-curve gain
+                                            drift (random walk + common fade)
+    sigma_pixel_offset                      per-channel subtractor offset
+                                            drift — the family the trim DAC
+                                            can re-cancel (schedule.py)
+    temp_amplitude_c (+ period, coeff)      parameterized ambient-temperature
+                                            profile: a sinusoidal excursion
+                                            adds a common-mode switching-logit
+                                            shift (VCMA barrier is thermally
+                                            activated); common-mode ⇒ also
+                                            trimmable
+
+All perturbations are applied through the SAME physics hooks the variation
+subsystem uses (`ChipMaps` fields — switching-logit offset/gain, R_P/TMR
+scales, pixel gain/offset), never through forks of the physics. A zero-rate
+config (or t = 0) returns the input chip bit-identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.variation.chip import ChipMaps
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftConfig:
+    """Aging profile of a chip population (frozen -> safe as a jit static).
+
+    Rates are per unit of the log-time aging factor ``a(t) =
+    log1p(t / tau_frames)``; every rate at 0 (and ``temp_amplitude_c=0``)
+    makes ``evolve_chip`` a bit-exact identity at any age.
+    """
+    sigma_logit_offset: float = 0.0   # per-MTJ additive logit drift / age unit
+    sigma_logit_gain: float = 0.0     # per-MTJ relative slope drift
+    sigma_r_p: float = 0.0            # per-MTJ relative R_P drift
+    sigma_tmr: float = 0.0            # per-MTJ relative TMR random drift
+    tmr_retention: float = 0.0        # common TMR-window loss (retention)
+    sigma_pixel_gain: float = 0.0     # per-channel curve-gain random drift
+    pixel_gain_aging: float = 0.0     # common curve-gain fade
+    sigma_pixel_offset: float = 0.0   # per-channel subtractor offset drift
+    tau_frames: float = 1.0e4         # age normalization of the log-time law
+    # parameterized ambient-temperature profile (e.g. a diurnal cycle):
+    # dT(t) = amplitude * sin(2*pi*t / period), entering as a common-mode
+    # switching-logit shift of temp_logit_per_c * dT
+    temp_amplitude_c: float = 0.0
+    temp_period_frames: float = 1.0e5
+    temp_logit_per_c: float = -0.02   # logit shift per deg C (barrier softens)
+    drift_seed: int = 1               # base seed; chip i folds i into it
+
+    @property
+    def enabled(self) -> bool:
+        """True when any drift family has a non-zero rate."""
+        return any(r > 0.0 for r in (
+            self.sigma_logit_offset, self.sigma_logit_gain, self.sigma_r_p,
+            self.sigma_tmr, self.tmr_retention, self.sigma_pixel_gain,
+            self.pixel_gain_aging, self.sigma_pixel_offset,
+            self.temp_amplitude_c))
+
+    def scaled(self, s: float) -> "DriftConfig":
+        """The same profile with every rate scaled by ``s`` (sweep axis)."""
+        return dataclasses.replace(
+            self,
+            sigma_logit_offset=self.sigma_logit_offset * s,
+            sigma_logit_gain=self.sigma_logit_gain * s,
+            sigma_r_p=self.sigma_r_p * s,
+            sigma_tmr=self.sigma_tmr * s,
+            tmr_retention=self.tmr_retention * s,
+            sigma_pixel_gain=self.sigma_pixel_gain * s,
+            pixel_gain_aging=self.pixel_gain_aging * s,
+            sigma_pixel_offset=self.sigma_pixel_offset * s,
+            temp_amplitude_c=self.temp_amplitude_c * s)
+
+
+class DriftMaps(NamedTuple):
+    """Per-chip drift *directions* (a pytree of plain arrays — vmap-able).
+
+    Each device/channel ages along its own frozen unit-normal direction;
+    the directions are part of the chip's identity (deterministic in
+    ``(drift_seed, chip_id)``), the *magnitude* is the time-dependent part.
+    """
+    d_logit_offset: jax.Array   # (C, n_redundant)
+    d_logit_gain: jax.Array     # (C, n_redundant)
+    d_r_p: jax.Array            # (C, n_redundant)
+    d_tmr: jax.Array            # (C, n_redundant)
+    d_pixel_gain: jax.Array     # (C,)
+    d_pixel_offset: jax.Array   # (C,)
+
+
+def sample_drift_maps(dcfg: DriftConfig, n_channels: int, n_redundant: int,
+                      chip_id: jax.Array | int = 0) -> DriftMaps:
+    """Draw one chip's deterministic drift directions.
+
+    Pure in ``(dcfg.drift_seed, n_channels, n_redundant, chip_id)`` —
+    ``chip_id`` may be traced, so fleet sweeps can vmap over it exactly like
+    ``variation.sample_chip``.
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(dcfg.drift_seed), chip_id)
+    ks = jax.random.split(key, 6)
+    cn = (n_channels, n_redundant)
+    return DriftMaps(
+        d_logit_offset=jax.random.normal(ks[0], cn),
+        d_logit_gain=jax.random.normal(ks[1], cn),
+        d_r_p=jax.random.normal(ks[2], cn),
+        d_tmr=jax.random.normal(ks[3], cn),
+        d_pixel_gain=jax.random.normal(ks[4], (n_channels,)),
+        d_pixel_offset=jax.random.normal(ks[5], (n_channels,)))
+
+
+def aging(t: jax.Array, tau_frames: float) -> jax.Array:
+    """Log-time aging factor: 0 at t = 0, 1 at t ≈ 1.72·tau, slow thereafter.
+
+    The standard empirical law for VCMA/retention degradation — fast early
+    burn-in, logarithmic tail. ``t`` is the frame-clock age (traced array).
+    """
+    return jnp.log1p(jnp.maximum(jnp.asarray(t, jnp.float32), 0.0)
+                     / tau_frames)
+
+
+def temp_excursion_c(t: jax.Array, dcfg: DriftConfig) -> jax.Array:
+    """Ambient-temperature excursion (deg C) of the parameterized profile."""
+    return dcfg.temp_amplitude_c * jnp.sin(
+        2.0 * math.pi * jnp.asarray(t, jnp.float32)
+        / dcfg.temp_period_frames)
+
+
+def evolve_chip(chip: ChipMaps, maps: DriftMaps, t: jax.Array, *,
+                dcfg: DriftConfig) -> ChipMaps:
+    """The chip as it stands at frame-clock age ``t`` (pure jnp in arrays).
+
+    ``chip`` is the t = 0 sampled instance (``variation.sample_chip`` — or
+    ``identity_chip`` for a nominal device that only ages), ``maps`` its
+    frozen drift directions, ``t`` the traced age in frames. Only ``dcfg``
+    is static: a jitted caller can evolve the chip every microbatch with
+    zero recompilation. ``dcfg.enabled == False`` (or t = 0) returns the
+    input maps bit-identically — the same floors as ``sample_chip`` keep
+    aged gains/resistances physical at extreme ages.
+    """
+    if not dcfg.enabled:
+        return chip
+    a = aging(t, dcfg.tau_frames)
+    # common-mode thermal logit shift: trimmable (schedule.py), like any
+    # channel-common offset
+    d_logit_t = dcfg.temp_logit_per_c * temp_excursion_c(t, dcfg)
+    off = (chip.mtj_logit_offset
+           + dcfg.sigma_logit_offset * a * maps.d_logit_offset + d_logit_t)
+    gain = chip.mtj_logit_gain * (1.0 + dcfg.sigma_logit_gain * a
+                                  * maps.d_logit_gain)
+    r_p = chip.r_p_scale * (1.0 + dcfg.sigma_r_p * a * maps.d_r_p)
+    tmr = chip.tmr_scale * (1.0 - dcfg.tmr_retention * a) \
+        * (1.0 + dcfg.sigma_tmr * a * maps.d_tmr)
+    pg = chip.pixel_gain * (1.0 - dcfg.pixel_gain_aging * a) \
+        * (1.0 + dcfg.sigma_pixel_gain * a * maps.d_pixel_gain)
+    po = chip.pixel_offset + dcfg.sigma_pixel_offset * a * maps.d_pixel_offset
+    return ChipMaps(mtj_logit_offset=off,
+                    mtj_logit_gain=jnp.maximum(gain, 0.05),
+                    r_p_scale=jnp.maximum(r_p, 0.05),
+                    tmr_scale=jnp.maximum(tmr, 0.05),
+                    pixel_gain=jnp.maximum(pg, 0.05),
+                    pixel_offset=po)

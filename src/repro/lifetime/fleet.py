@@ -1,0 +1,166 @@
+"""Fleet-lifetime Monte-Carlo: what a population of aging sensors loses,
+and what scheduled recalibration buys back (DESIGN.md §8).
+
+The yield story of PR 3 asked "what fraction of a freshly-fabbed fleet
+meets spec?"; this module asks the follow-on production question: *for how
+long?* Three analyses:
+
+    rate_error_vs_age    vmapped over a deterministic fleet: per-channel
+                         expected activation-rate error at each age, with
+                         the STALE t = 0 trim vs a trim REFRESHED at that
+                         age (the idealized endpoint of any schedule).
+    time_to_failure      per-chip first age whose worst-channel rate error
+                         exceeds a budget — the fleet's lifetime
+                         distribution, stale vs refreshed.
+    accuracy_vs_age      end-task accuracy through the ``device`` backend on
+                         aged chips (paired chips/batches), stale trim vs
+                         scheduled recalibration — the headline curve of
+                         benchmarks/lifetime_bench.py.
+
+Everything analytic is vmapped over ``chip_id`` (chip sampling, drift maps,
+and the bisection trim solver are all pure in it); only the Monte-Carlo
+device-backend eval loops in Python, exactly like
+``variation.yield_analysis.accuracy_sweep``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hoyer, p2m
+from repro.lifetime.drift import DriftConfig, evolve_chip, sample_drift_maps
+# NB: the package attribute ``repro.variation.calibrate`` is the *function*
+# (re-exported in __init__) — import from the module directly
+from repro.variation.calibrate import channel_rates, solve_trim, target_rates
+from repro.variation.chip import VariationConfig, sample_chip
+
+
+def rate_error_vs_age(params: Dict, pcfg: p2m.P2MConfig,
+                      vcfg: VariationConfig, dcfg: DriftConfig,
+                      frames: jax.Array, ages: Sequence[float],
+                      n_chips: int, *, iters: int = 12, span: float = 2.0
+                      ) -> Dict[str, np.ndarray]:
+    """Vmapped fleet rate-error surfaces over the age grid.
+
+    ``params`` = ``{"w", "v_th"}``; ``frames`` the calibration batch. Every
+    chip is born (``sample_chip``), trimmed at t = 0, then measured at each
+    age both with that stale trim and with a trim re-solved against the
+    aged chip. Returns ``(n_chips, n_ages)`` arrays:
+
+        err_stale_mean / err_stale_worst    mean / worst per-channel
+                                            |rate − target|, stale trim
+        err_recal_mean / err_recal_worst    same with the refreshed trim
+    """
+    u = p2m.hardware_conv(frames, params["w"], pcfg)
+    theta = hoyer.effective_threshold(u, params["v_th"]) * params["v_th"]
+    ref = target_rates(u, theta, pcfg)
+    c, n = pcfg.out_channels, pcfg.mtj.n_redundant
+    ages_f = [float(t) for t in ages]
+
+    def per_chip(cid):
+        chip0 = sample_chip(vcfg, c, n, cid)
+        maps = sample_drift_maps(dcfg, c, n, cid)
+        trim0 = solve_trim(u, theta, chip0, ref, pcfg,
+                           iters=iters, span=span)
+        rows = {"err_stale_mean": [], "err_stale_worst": [],
+                "err_recal_mean": [], "err_recal_worst": []}
+        for t in ages_f:        # small static grid — unrolled under vmap
+            aged = evolve_chip(chip0, maps, jnp.asarray(t, jnp.float32),
+                               dcfg=dcfg)
+            e_stale = jnp.abs(
+                channel_rates(u, theta, aged, trim0, pcfg) - ref)
+            trim_t = solve_trim(u, theta, aged, ref, pcfg,
+                                iters=iters, span=span)
+            e_recal = jnp.abs(
+                channel_rates(u, theta, aged, trim_t, pcfg) - ref)
+            rows["err_stale_mean"].append(jnp.mean(e_stale))
+            rows["err_stale_worst"].append(jnp.max(e_stale))
+            rows["err_recal_mean"].append(jnp.mean(e_recal))
+            rows["err_recal_worst"].append(jnp.max(e_recal))
+        return {k: jnp.stack(v) for k, v in rows.items()}
+
+    out = jax.jit(jax.vmap(per_chip))(jnp.arange(n_chips))
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def time_to_failure(err_worst: np.ndarray, ages: Sequence[float],
+                    budget: float) -> Dict[str, float]:
+    """Fleet lifetime distribution from an ``(n_chips, n_ages)`` surface.
+
+    A chip fails at the first grid age whose worst-channel rate error
+    exceeds ``budget``; chips that never fail inside the grid report the
+    horizon (right-censored — ``survivor_fraction`` says how many).
+    """
+    ages_f = np.asarray([float(t) for t in ages])
+    failed = err_worst > budget                       # (n_chips, n_ages)
+    any_fail = failed.any(axis=1)
+    first = np.where(any_fail, failed.argmax(axis=1), len(ages_f) - 1)
+    ttf = ages_f[first]
+    return {
+        "budget": float(budget),
+        "survivor_fraction": float(1.0 - any_fail.mean()),
+        "ttf_frames_p10": float(np.percentile(ttf, 10)),
+        "ttf_frames_p50": float(np.percentile(ttf, 50)),
+        "ttf_frames_p90": float(np.percentile(ttf, 90)),
+    }
+
+
+def accuracy_vs_age(params, vis_cfg, batches: Iterable[Dict], *,
+                    vcfg: VariationConfig, dcfg: DriftConfig,
+                    ages: Sequence[float], n_chips: int,
+                    calibration_frames: jax.Array, key: jax.Array,
+                    cal_iters: int = 12, cal_span: float = 2.0
+                    ) -> List[Dict[str, float]]:
+    """End-task accuracy along the age axis, stale trim vs refreshed trim.
+
+    Each chip is calibrated at birth (trim0); at every age the aged chip is
+    evaluated through the ``device`` backend (exact per-MTJ Monte-Carlo)
+    twice — with the stale birth trim ("what an unmaintained fleet serves")
+    and with a trim refreshed against the aged chip ("what the scheduler
+    restores"). The aged chip and trim ride in ``params["p2m"]`` as array
+    operands (the frontend's ``params["chip"]`` override), so the whole
+    sweep reuses ONE compiled forward per batch shape. Batches and keys are
+    paired across variants so the comparison is head-to-head.
+    """
+    from repro.models import vision
+
+    pcfg = vis_cfg.p2m
+    c, n = pcfg.out_channels, pcfg.mtj.n_redundant
+    u = p2m.hardware_conv(calibration_frames, params["p2m"]["w"], pcfg)
+    theta = hoyer.effective_threshold(u, params["p2m"]["v_th"]) \
+        * params["p2m"]["v_th"]
+    ref = target_rates(u, theta, pcfg)
+    solve = jax.jit(lambda chip: solve_trim(
+        u, theta, chip, ref, pcfg, iters=cal_iters, span=cal_span))
+
+    batches = list(batches)
+    accs = {tag: np.zeros((len(ages), n_chips))
+            for tag in ("stale", "recal")}
+    for ci in range(n_chips):
+        chip0 = sample_chip(vcfg, c, n, ci)
+        maps = sample_drift_maps(dcfg, c, n, ci)
+        trim0 = solve(chip0)
+        for ai, t in enumerate(ages):
+            aged = evolve_chip(chip0, maps, jnp.asarray(float(t),
+                                                        jnp.float32),
+                               dcfg=dcfg)
+            trims = {"stale": trim0, "recal": solve(aged)}
+            for tag, trim in trims.items():
+                pp = {**params, "p2m": {**params["p2m"],
+                                        "chip": aged, "cal_trim": trim}}
+                correct = total = 0
+                for j, b in enumerate(batches):
+                    k = jax.random.fold_in(key, (ci * 131 + ai) * 7 + j)
+                    logits, _, _ = vision.forward(pp, b["image"], vis_cfg,
+                                                  backend="device", key=k)
+                    correct += int(jnp.sum(jnp.argmax(logits, -1)
+                                           == b["label"]))
+                    total += int(b["label"].shape[0])
+                accs[tag][ai, ci] = correct / total
+    return [{"age_frames": float(t),
+             "acc_stale": float(accs["stale"][ai].mean()),
+             "acc_recal": float(accs["recal"][ai].mean())}
+            for ai, t in enumerate(ages)]

@@ -1,0 +1,187 @@
+"""Recalibration scheduling: when does a deployed sensor re-run the tester?
+
+A trim programmed at t = 0 (variation/calibrate.py) is solved for the chip
+*as it was then*. As the chip drifts (lifetime/drift.py) the trim goes
+stale; this module decides when to refresh it and performs the refresh:
+
+    policy    = SchedulePolicy(period_frames=4096)            # periodic
+    policy    = SchedulePolicy(rate_err_threshold=0.02)       # triggered
+    scheduler = RecalibrationScheduler(policy, pcfg, cal_frames, params_p2m)
+
+Two policies (composable — either condition fires):
+
+    periodic    every ``period_frames`` of the engine's frame clock — the
+                maintenance schedule a fab would spec from the drift model.
+    triggered   the engine streams the frontend's per-channel activation
+                rates (``aux["channel_rates"]``) into ``observe``; an EMA is
+                compared against the baseline captured at the last
+                recalibration, and a drift beyond ``rate_err_threshold``
+                (after ``min_interval_frames`` of hysteresis) fires —
+                condition-based maintenance from live telemetry alone.
+
+A refresh re-runs the SAME tester loop the chip was born with
+(``variation.calibrate.solve_trim``) against the *aged* chip: the
+calibration pre-activation/threshold/targets are computed once at
+construction (weights don't age), and the solver is jitted with the chip as
+an operand, so refresh #100 costs no more compilation than refresh #1.
+Each refresh is charged ``energy.recalibration_energy_pj`` — the lifetime
+benchmarks report energy-per-frame *including* maintenance.
+
+``LifetimeState`` is the engine-side record of one aging sensor: its t = 0
+chip, drift directions, currently-programmed trim, frame-clock age, and the
+recalibration audit trail (serving/vision.py threads it through
+``VisionEngine.stream()``).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy, hoyer, p2m
+from repro.lifetime.drift import DriftMaps
+# NB: the package attribute ``repro.variation.calibrate`` is the *function*
+# (re-exported in __init__) — import from the module directly
+from repro.variation.calibrate import channel_rates, solve_trim, target_rates
+from repro.variation.chip import ChipMaps
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulePolicy:
+    """When to refresh the trim (frozen; both conditions may be armed)."""
+    period_frames: Optional[int] = None       # periodic: every N frames
+    rate_err_threshold: Optional[float] = None  # triggered: EMA drift bound
+    min_interval_frames: int = 0              # hysteresis for the trigger
+    ema: float = 0.5          # decay of the channel-rate monitoring EMA
+    cal_iters: int = 12       # bisection depth of each refresh
+    cal_span: float = 2.0     # bisection window (conv-output units)
+
+    @property
+    def enabled(self) -> bool:
+        return (self.period_frames is not None
+                or self.rate_err_threshold is not None)
+
+
+@dataclasses.dataclass
+class LifetimeState:
+    """One aging sensor as the serving engine carries it (host-side)."""
+    chip0: ChipMaps              # the t = 0 sampled chip instance
+    maps: DriftMaps              # its frozen drift directions
+    trim: jax.Array              # (C,) currently-programmed trim DAC
+    age_frames: int = 0          # frame-clock age
+    recal_count: int = 0
+    last_recal_frame: int = 0
+    recal_energy_pj: float = 0.0  # cumulative maintenance energy charged
+    rate_err: float = 0.0         # latest monitored rate-error metric
+    # recent monitored values (bounded: a 10^9-frame stream must not grow
+    # host memory — the full trace belongs in external telemetry, not here)
+    rate_err_history: Deque[float] = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=1024))
+
+
+class RecalibrationScheduler:
+    """Monitors streamed channel rates and refreshes the trim on schedule.
+
+    ``params_p2m`` = the deployed ``{"w", "v_th"}`` frontend params (fixed
+    for the engine's lifetime — only the chip ages), ``cal_frames`` a
+    representative (B, H, W, C) calibration batch the virtual tester
+    re-exposes at every refresh.
+    """
+
+    def __init__(self, policy: SchedulePolicy, pcfg: p2m.P2MConfig,
+                 cal_frames: jax.Array, params_p2m: dict, *,
+                 frame_spec: Optional[energy.FrameSpec] = None,
+                 consts: energy.EnergyConstants = energy.DEFAULT_ENERGY):
+        if not policy.enabled:
+            raise ValueError("SchedulePolicy needs period_frames and/or "
+                             "rate_err_threshold set")
+        if cal_frames is None:
+            raise ValueError("a scheduler needs calibration frames — the "
+                             "tester loop re-exposes them at every refresh")
+        self.policy = policy
+        self.pcfg = pcfg
+        u = p2m.hardware_conv(cal_frames, params_p2m["w"], pcfg)
+        theta = hoyer.effective_threshold(u, params_p2m["v_th"]) \
+            * params_p2m["v_th"]
+        ref = target_rates(u, theta, pcfg)
+        self._ref = ref
+        # chip is the ONLY operand: one compile serves every future refresh
+        self._solve = jax.jit(lambda chip: solve_trim(
+            u, theta, chip, ref, pcfg,
+            iters=policy.cal_iters, span=policy.cal_span))
+        self._rates = jax.jit(lambda chip, trim: channel_rates(
+            u, theta, chip, trim, pcfg))
+        if frame_spec is None:
+            # same ceil-rounded geometry as VisionEngine._frame_spec, so a
+            # directly-constructed scheduler charges the same refresh
+            # energy as one built inside the engine
+            b, h, w, c = cal_frames.shape
+            frame_spec = energy.FrameSpec(
+                h_in=h, w_in=w, c_in=c,
+                h_out=max(-(-h // pcfg.stride) // 2, 1),
+                w_out=max(-(-w // pcfg.stride) // 2, 1),
+                c_out=pcfg.out_channels, kernel=pcfg.kernel_size,
+                stride=pcfg.stride, n_mtj=pcfg.mtj.n_redundant)
+        # tester-loop energy of ONE refresh (charged by the engine per fire)
+        self.recal_energy_pj = energy.recalibration_energy_pj(
+            frame_spec, consts, n_cal_frames=cal_frames.shape[0],
+            bisection_iters=policy.cal_iters)
+        self._ema: Optional[np.ndarray] = None
+        self._baseline: Optional[np.ndarray] = None
+        self._last_err = 0.0
+
+    def observe(self, rates) -> float:
+        """Fold one microbatch's per-channel activation rates into the EMA.
+
+        ``rates`` is the frontend's ``aux["channel_rates"]`` (or None, a
+        no-op). Returns the monitored metric: mean |EMA − baseline| where
+        the baseline is the EMA snapshot captured right after the last
+        recalibration (drift detection against the chip's own post-trim
+        behaviour — works on live traffic, no golden frames needed).
+        """
+        if rates is None:
+            return self._last_err
+        r = np.asarray(rates, np.float64)
+        if self._ema is None:
+            self._ema = r.copy()
+        else:
+            e = self.policy.ema
+            self._ema = e * self._ema + (1.0 - e) * r
+        if self._baseline is None:
+            self._baseline = self._ema.copy()
+        self._last_err = float(np.mean(np.abs(self._ema - self._baseline)))
+        return self._last_err
+
+    def should_fire(self, age_frames: int, last_recal_frame: int) -> bool:
+        since = age_frames - last_recal_frame
+        p = self.policy
+        if p.period_frames is not None and since >= p.period_frames:
+            return True
+        if (p.rate_err_threshold is not None
+                and since >= p.min_interval_frames
+                and self._last_err > p.rate_err_threshold):
+            return True
+        return False
+
+    def recalibrate(self, chip: ChipMaps) -> jax.Array:
+        """Refresh the trim against the aged chip; re-arms the baseline.
+
+        Deterministic (the tester measures expected rates — no RNG), so a
+        refresh can never perturb the engine's key-folding sequence.
+        """
+        trim = self._solve(chip)
+        # the post-refresh rates are new normal: re-baseline the monitor
+        self._ema = None
+        self._baseline = None
+        self._last_err = 0.0
+        return trim
+
+    def rate_error(self, chip: ChipMaps, trim: Optional[jax.Array]) -> float:
+        """Ground-truth mean |rate − target| of a chip at a trim (audit)."""
+        c = self._ref.shape[-1]
+        t = jnp.zeros((c,)) if trim is None else trim
+        return float(jnp.mean(jnp.abs(self._rates(chip, t) - self._ref)))

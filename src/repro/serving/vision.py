@@ -25,18 +25,37 @@ splits larger incoming batches and folds a fresh key per microbatch (each
 microbatch is one global-shutter exposure draw), then merges the outputs
 back into one result per incoming batch.
 
-``out`` is a dict with ``labels``, ``probs``, and the frontend aux
-(sparsity, V_CONV stats, per-frame global-shutter energy accounting) so a
-deployment can monitor the sensor link, not just the predictions.
+``out`` is a dict with ``labels``, ``probs``, the frontend aux (sparsity,
+per-channel rates, V_CONV stats, per-frame global-shutter energy
+accounting) and serving telemetry: measured ``wall_ms`` /
+``throughput_fps`` of the step plus the MODELED sensor-side frame latency
+(``sensor_latency_us`` / ``sensor_fps`` from ``core/energy.frame_latency_us``
+at this engine's frame geometry) — so a deployment can monitor both the
+compute link and the physical sensor budget, not just the predictions.
 
 Per-chip realism: when ``cfg.variation`` names a sampled chip, pass the
 chip's ``calibration=`` artifact (variation/calibrate.py) and the engine
 programs its trim into the frontend params at construction — each engine
 then simulates one distinct calibrated sensor out of the fleet.
+
+Sensor lifetime (DESIGN.md §8): pass ``drift=`` (a ``lifetime.DriftConfig``)
+and the engine's chip is no longer frozen at fabrication: a frame-clock
+counts served frames, the chip's maps are re-evolved every step
+(``lifetime.evolve_chip`` — time enters as an array operand riding in
+``params["chip"]``, so the compiled step NEVER recompiles as the chip
+ages), and with ``schedule=`` (a ``lifetime.SchedulePolicy``) +
+``calibration_frames=`` a ``RecalibrationScheduler`` watches the streamed
+per-channel activation rates and refreshes ``params["cal_trim"]`` in place
+when the policy fires — charging each refresh's tester energy. Lifetime
+telemetry (age, recalibration count/energy, monitored rate error) rides in
+the output dict under ``lifetime_*`` keys. ``drift=None`` (or an all-zero
+profile) leaves every code path bit-identical to a non-aging engine —
+including with a scheduler armed (nothing drifts, nothing fires).
 """
 from __future__ import annotations
 
 import functools
+import time
 from typing import Dict, Iterable, Iterator, List, Optional
 
 import jax
@@ -44,7 +63,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import sharding
+from repro.core import energy
 from repro.models import vision
+from repro.variation import chip as chip_mod
 
 # logical axes of a (B, H, W, C) frame batch: shard batch, replicate pixels
 FRAME_AXES = ("batch", None, None, None)
@@ -58,7 +79,9 @@ class VisionEngine:
                  mesh: Optional[Mesh] = None,
                  rules: Optional[sharding.ShardingRules] = None,
                  microbatch: Optional[int] = None,
-                 calibration=None):
+                 calibration=None,
+                 drift=None, schedule=None,
+                 calibration_frames: Optional[jax.Array] = None):
         self.cfg = cfg
         self.backend = backend or cfg.frontend_backend
         self.mesh = mesh
@@ -81,6 +104,86 @@ class VisionEngine:
         self.params = params
         self._step = jax.jit(functools.partial(self._forward, cfg=cfg,
                                                backend=self.backend))
+        # modeled sensor-side frame budget at this engine's geometry
+        # (core/energy §3.4) — constant telemetry, computed once
+        lat = energy.frame_latency_us(self._frame_spec())
+        self._sensor_latency_us = float(lat["total_us"])
+        self._sensor_fps = float(lat["fps"])
+        self.lifetime = None
+        self._scheduler = None
+        if drift is not None and drift.enabled:
+            self._init_lifetime(drift, schedule, calibration_frames)
+
+    def _frame_spec(self) -> energy.FrameSpec:
+        cfg, pcfg = self.cfg, self.cfg.p2m
+        conv = -(-cfg.in_hw // pcfg.stride)
+        return energy.FrameSpec(
+            h_in=cfg.in_hw, w_in=cfg.in_hw, c_in=pcfg.in_channels,
+            h_out=max(conv // 2, 1), w_out=max(conv // 2, 1),
+            c_out=pcfg.out_channels, kernel=pcfg.kernel_size,
+            stride=pcfg.stride, n_mtj=pcfg.mtj.n_redundant)
+
+    # --- sensor-lifetime state machine (DESIGN.md §8) -----------------------
+
+    def _init_lifetime(self, drift, schedule, calibration_frames) -> None:
+        from repro import lifetime as lt
+        pcfg = self.cfg.p2m
+        c, n = pcfg.out_channels, pcfg.mtj.n_redundant
+        vcfg = self.cfg.variation
+        chip0 = (chip_mod.sample_chip(vcfg, c, n, self.cfg.chip_id)
+                 if vcfg is not None and vcfg.enabled
+                 else chip_mod.identity_chip(c, n))
+        trim0 = self.params["p2m"].get("cal_trim")
+        if trim0 is None:
+            # zero trim is a regression-tested bit-exact no-op; keeping the
+            # key always present keeps the params pytree structure (and so
+            # the jit cache) stable across recalibrations
+            trim0 = jnp.zeros((c,), jnp.float32)
+        self.lifetime = lt.LifetimeState(
+            chip0=chip0,
+            maps=lt.sample_drift_maps(drift, c, n, self.cfg.chip_id),
+            trim=trim0)
+        # ONE compiled evolve for the engine's whole life: drift config is
+        # the only static; chip / maps / age are array operands
+        self._evolve = jax.jit(functools.partial(lt.evolve_chip, dcfg=drift))
+        if schedule is not None:
+            self._scheduler = lt.RecalibrationScheduler(
+                schedule, pcfg, calibration_frames, self.params["p2m"],
+                frame_spec=self._frame_spec())
+
+    def _aged_params(self):
+        """The param tree for the current frame-clock age (array operands:
+        the jitted step sees the same pytree structure every call)."""
+        st = self.lifetime
+        chip = self._evolve(st.chip0, st.maps,
+                            jnp.asarray(st.age_frames, jnp.float32))
+        return {**self.params, "p2m": {**self.params["p2m"],
+                                       "chip": chip, "cal_trim": st.trim}}
+
+    def _advance_lifetime(self, out: Dict, n_frames: int) -> Dict:
+        """Tick the frame clock, run the scheduler, return telemetry."""
+        st = self.lifetime
+        st.age_frames += n_frames
+        fired = 0.0
+        if self._scheduler is not None:
+            st.rate_err = self._scheduler.observe(out.get("channel_rates"))
+            st.rate_err_history.append(st.rate_err)
+            if self._scheduler.should_fire(st.age_frames,
+                                           st.last_recal_frame):
+                aged = self._evolve(st.chip0, st.maps,
+                                    jnp.asarray(st.age_frames, jnp.float32))
+                st.trim = self._scheduler.recalibrate(aged)
+                st.recal_count += 1
+                st.last_recal_frame = st.age_frames
+                st.recal_energy_pj += self._scheduler.recal_energy_pj
+                fired = 1.0
+        return {"lifetime_age_frames": float(st.age_frames),
+                "lifetime_recal_count": float(st.recal_count),
+                "lifetime_recal_fired": fired,
+                "lifetime_rate_err": float(st.rate_err),
+                "lifetime_recal_energy_pj": float(st.recal_energy_pj)}
+
+    # --- the serving step ----------------------------------------------------
 
     @staticmethod
     def _forward(params, frames, key, *, cfg, backend):
@@ -100,24 +203,51 @@ class VisionEngine:
 
     def classify(self, frames: jax.Array,
                  key: Optional[jax.Array] = None) -> Dict:
-        """frames: (B, H, W, C) in [0, 1]. Returns labels/probs/frontend aux.
+        """frames: (B, H, W, C) in [0, 1]. Returns labels/probs/frontend aux
+        plus serving telemetry (wall_ms, throughput_fps, sensor_latency_us).
 
         Without an explicit ``key`` the engine folds its frame counter into
         the seed key and advances it. An explicit ``key`` (replaying a frame,
-        A/B-ing a draw) does NOT advance the counter, so replays leave the
-        rng sequence of subsequent auto-keyed frames untouched.
+        A/B-ing a draw) does NOT advance the counter — nor, on an aging
+        engine, the frame-clock: a replay must not age the chip.
         """
+        return self._classify(frames, key, advance=key is None)
+
+    def _classify(self, frames: jax.Array, key: Optional[jax.Array],
+                  advance: bool) -> Dict:
         if key is None:
             key = jax.random.fold_in(self._key, self._frame_count)
             self._frame_count += 1
-        return self._step(self.params, self._shard_frames(frames), key)
+        params = self.params if self.lifetime is None else self._aged_params()
+        # the wall/throughput counters are HONEST (device-synchronized)
+        # measurements, which costs the async-dispatch overlap between
+        # microbatches. On this repo's CPU/interpret simulation target that
+        # overlap is nil; a latency-critical accelerator deployment would
+        # move the sync off the serving path (async telemetry) instead.
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(
+            self._step(params, self._shard_frames(frames), key))
+        wall = time.perf_counter() - t0
+        n = frames.shape[0]
+        out = dict(out)
+        out["wall_ms"] = wall * 1e3
+        out["throughput_fps"] = n / wall
+        out["sensor_latency_us"] = self._sensor_latency_us
+        out["sensor_fps"] = self._sensor_fps
+        if self.lifetime is not None and advance:
+            out.update(self._advance_lifetime(out, n))
+        return out
 
     def stream(self, frame_batches: Iterable[jax.Array]) -> Iterator[Dict]:
         """Classify a stream of frame batches; per-batch (and, with
         ``microbatch=``, per-microbatch) rng keys are folded in so the
         stochastic MTJ draws differ exposure to exposure (global shutter:
         every frame is one exposure + burst read). Yields one merged output
-        per incoming batch regardless of microbatching."""
+        per incoming batch regardless of microbatching. On an aging engine
+        the frame-clock advances per microbatch, so the chip the Nth
+        microbatch sees is older than the first — and the scheduler may
+        refresh the trim mid-stream (a deterministic, key-free event: the
+        rng sequence of the draws is identical with or without it)."""
         for frames in frame_batches:
             mb = self.microbatch
             if not mb or frames.shape[0] <= mb:
@@ -126,28 +256,54 @@ class VisionEngine:
             base = jax.random.fold_in(self._key, self._frame_count)
             self._frame_count += 1
             starts = list(range(0, frames.shape[0], mb))
-            outs = [self.classify(frames[i:i + mb],
-                                  key=jax.random.fold_in(base, j))
+            outs = [self._classify(frames[i:i + mb],
+                                   key=jax.random.fold_in(base, j),
+                                   advance=True)
                     for j, i in enumerate(starts)]
             sizes = [min(mb, frames.shape[0] - i) for i in starts]
             yield _merge_outputs(outs, sizes)
+
+
+# aux keys that are per-CHANNEL vectors, not per-example rows: merged by
+# frame-weighted mean (concatenating them would grow the channel axis)
+_CHANNEL_KEYS = ("channel_rates",)
+# cumulative / monotone counters: the batch-level value is the LAST
+# microbatch's (averaging would report an age/count/energy the engine never
+# had — the non-microbatched path reports the exact running value)
+_CUMULATIVE_KEYS = ("lifetime_age_frames", "lifetime_recal_count",
+                    "lifetime_recal_energy_pj", "lifetime_rate_err")
+# events: fired-anywhere-in-the-batch, not a firing *fraction*
+_EVENT_KEYS = ("lifetime_recal_fired",)
+# additive costs: the batch's total, not a per-microbatch average
+_SUM_KEYS = ("wall_ms",)
 
 
 def _merge_outputs(outs: List[Dict], sizes: List[int]) -> Dict:
     """Merge per-microbatch outputs into one batch-level dict.
 
     Per-example arrays (leading dim = microbatch size) are concatenated;
-    scalar monitoring stats are reduced respecting their semantics:
-    min/max keys by min/max, everything else — means and per-frame energies
-    — by a frame-count-WEIGHTED mean (the tail microbatch of a batch that
-    does not divide evenly must not be over-weighted).
+    per-channel vectors (``channel_rates``) and scalar monitoring stats are
+    reduced respecting their semantics: cumulative lifetime counters by
+    last-value, recalibration events by any-fired, wall clock by total (and
+    ``throughput_fps`` recomputed from it), min/max keys by min/max,
+    everything else — means, rates, and per-frame energies — by a
+    frame-count-WEIGHTED mean (the tail microbatch of a batch that does not
+    divide evenly must not be over-weighted).
     """
     w = jnp.asarray(sizes, jnp.float32)
     w = w / jnp.sum(w)
     merged: Dict = {}
     for k in outs[0]:
         vals = [o[k] for o in outs]
-        if getattr(vals[0], "ndim", 0) >= 1:
+        if k in _CHANNEL_KEYS:
+            merged[k] = jnp.sum(jnp.stack(vals) * w[:, None], axis=0)
+        elif k in _CUMULATIVE_KEYS:
+            merged[k] = vals[-1]
+        elif k in _EVENT_KEYS:
+            merged[k] = max(float(v) for v in vals)
+        elif k in _SUM_KEYS:
+            merged[k] = sum(float(v) for v in vals)
+        elif getattr(vals[0], "ndim", 0) >= 1:
             merged[k] = jnp.concatenate(vals, axis=0)
         elif k.endswith("_min"):
             merged[k] = jnp.min(jnp.stack(vals))
@@ -155,4 +311,6 @@ def _merge_outputs(outs: List[Dict], sizes: List[int]) -> Dict:
             merged[k] = jnp.max(jnp.stack(vals))
         else:
             merged[k] = jnp.sum(jnp.stack(vals) * w)
+    if "wall_ms" in merged:
+        merged["throughput_fps"] = sum(sizes) / (merged["wall_ms"] / 1e3)
     return merged

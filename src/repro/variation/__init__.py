@@ -15,10 +15,13 @@ correlated column noise. This package owns that model end to end:
 ``repro.frontend`` threads a chip through the ``device`` and ``pallas``
 backends via ``FrontendConfig(variation=..., chip_id=...)``; this package
 deliberately never imports ``repro.frontend`` at module scope (the frontend
-imports ``variation.chip``).
+imports ``variation.chip``). ``repro.lifetime`` adds the time axis: it
+evolves a sampled ``ChipMaps`` with age and re-runs this package's tester
+loop against the aged chip (DESIGN.md §8).
 """
 from repro.variation.calibrate import (CalibrationArtifact, apply_calibration,
-                                       calibrate)
+                                       calibrate, channel_rates, solve_trim,
+                                       target_rates)
 from repro.variation.chip import (ChipMaps, VariationConfig, channel_operands,
                                   identity_chip, identity_operands,
                                   noise_maps, sample_chip)
@@ -27,6 +30,6 @@ from repro.variation.yield_analysis import (accuracy_sweep, chip_stats,
 
 __all__ = ["CalibrationArtifact", "ChipMaps", "VariationConfig",
            "accuracy_sweep", "apply_calibration", "calibrate",
-           "channel_operands", "chip_stats", "identity_chip",
+           "channel_operands", "channel_rates", "chip_stats", "identity_chip",
            "identity_operands", "noise_maps", "read_margin", "sample_chip",
-           "yield_sweep"]
+           "solve_trim", "target_rates", "yield_sweep"]

@@ -44,14 +44,16 @@ class CalibrationArtifact:
     chip_id: int = 0
 
 
-def _channel_rates(u: jax.Array, theta: jax.Array, chip: ChipMaps,
-                   trim: jax.Array, pcfg: p2m.P2MConfig) -> jax.Array:
+def channel_rates(u: jax.Array, theta: jax.Array, chip: ChipMaps,
+                  trim: Optional[jax.Array], pcfg: p2m.P2MConfig) -> jax.Array:
     """Expected per-channel activation rate of the chip at a given trim.
 
     THE chain the ``device`` backend runs (``chip.device_chain`` — one
     shared implementation, so the tester can never solve a trim for a
     different chain than the one deployed), evaluated in expectation via
-    the heterogeneous majority instead of Bernoulli draws.
+    the heterogeneous majority instead of Bernoulli draws. Public because
+    the lifetime scheduler and fleet analysis (repro/lifetime) measure an
+    *aged* chip through the very same tester chain.
     """
     _, p_dev = device_chain(u, theta, chip, trim, pcfg.pixel, pcfg.mtj)
     q = mtj.majority_prob_hetero(p_dev, pcfg.mtj.majority)
@@ -67,6 +69,37 @@ def target_rates(u: jax.Array, theta: jax.Array,
     return jnp.mean(q, axis=tuple(range(q.ndim - 1)))        # (C,)
 
 
+def solve_trim(u: jax.Array, theta: jax.Array, chip: ChipMaps,
+               ref: jax.Array, pcfg: p2m.P2MConfig, *,
+               iters: int = 16, span: float = 2.0) -> jax.Array:
+    """Vectorized bisection for the per-channel trim of one chip.
+
+    ``u`` / ``theta`` are the calibration-frame pre-activation and threshold
+    (computed once per deployed weight set); ``ref`` the (C,) design-target
+    rates. The activation rate is monotone increasing in the additive
+    u-domain trim, so ``iters`` bisection steps pin each channel to
+    ``span / 2**iters`` conv-output units. Pure jnp in ``(chip, u, theta,
+    ref)`` — jit with the chip as an operand (the lifetime scheduler
+    refreshes an aging chip's trim with zero recompiles) and vmap over a
+    fleet of chips (repro/lifetime/fleet.py).
+    """
+    c = ref.shape[-1]
+    # strongly-typed f32 endpoints: the solved trim must carry the same
+    # aval as a zero trim, or a streaming engine's first refresh would
+    # change the jit cache key (weak_type flip) and force a recompile
+    lo = jnp.full((c,), -span, jnp.float32)
+    hi = jnp.full((c,), span, jnp.float32)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        under = channel_rates(u, theta, chip, mid, pcfg) < ref
+        return jnp.where(under, mid, lo), jnp.where(under, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
 def calibrate(params: Dict, pcfg: p2m.P2MConfig, vcfg: VariationConfig,
               frames: jax.Array, chip_id: int = 0, *,
               iters: int = 16, span: float = 2.0,
@@ -77,8 +110,9 @@ def calibrate(params: Dict, pcfg: p2m.P2MConfig, vcfg: VariationConfig,
     is solved for the network the chip will actually run); ``frames`` is a
     representative (B, H, W, C) calibration batch in [0, 1]. The bisection
     window is ``[-span, +span]`` conv-output units. Pass ``chip=`` to reuse
-    pre-sampled maps; otherwise the chip is re-sampled deterministically
-    from ``(vcfg, chip_id)``.
+    pre-sampled maps (e.g. an *aged* chip from ``lifetime.evolve_chip``);
+    otherwise the chip is re-sampled deterministically from
+    ``(vcfg, chip_id)``.
     """
     if chip is None:
         chip = sample_chip(vcfg, pcfg.out_channels, pcfg.mtj.n_redundant,
@@ -86,26 +120,14 @@ def calibrate(params: Dict, pcfg: p2m.P2MConfig, vcfg: VariationConfig,
     u = p2m.hardware_conv(frames, params["w"], pcfg)
     theta = hoyer.effective_threshold(u, params["v_th"]) * params["v_th"]
     ref = target_rates(u, theta, pcfg)
-
-    def rates(trim):
-        return _channel_rates(u, theta, chip, trim, pcfg)
-
+    trim = solve_trim(u, theta, chip, ref, pcfg, iters=iters, span=span)
     c = pcfg.out_channels
-    lo = jnp.full((c,), -span)
-    hi = jnp.full((c,), span)
-
-    def body(_, lohi):
-        lo, hi = lohi
-        mid = 0.5 * (lo + hi)
-        under = rates(mid) < ref          # rate monotone increasing in trim
-        return jnp.where(under, mid, lo), jnp.where(under, hi, mid)
-
-    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
-    trim = 0.5 * (lo + hi)
     return CalibrationArtifact(
         trim=trim,
-        rate_err_before=jnp.abs(rates(jnp.zeros((c,))) - ref),
-        rate_err_after=jnp.abs(rates(trim) - ref),
+        rate_err_before=jnp.abs(
+            channel_rates(u, theta, chip, jnp.zeros((c,)), pcfg) - ref),
+        rate_err_after=jnp.abs(
+            channel_rates(u, theta, chip, trim, pcfg) - ref),
         chip_id=int(chip_id))
 
 

@@ -85,7 +85,13 @@ class VariationConfig:
 
 
 class ChipMaps(NamedTuple):
-    """One sampled chip instance (a pytree of plain arrays — vmap-able)."""
+    """One sampled chip instance (a pytree of plain arrays — vmap-able).
+
+    Being a plain-array pytree is load-bearing twice over: yield sweeps vmap
+    it over a fleet, and the lifetime subsystem (repro/lifetime) evolves it
+    with age and threads the AGED instance through the frontend as the
+    ``params["chip"]`` operand — never as a jit static.
+    """
     mtj_logit_offset: jax.Array   # (C, n_redundant)
     mtj_logit_gain: jax.Array     # (C, n_redundant)
     r_p_scale: jax.Array          # (C, n_redundant)

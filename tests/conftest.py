@@ -26,3 +26,23 @@ _SRC = os.path.join(_ROOT, "src")
 for path in (_HERE, _SRC, _ROOT):
     if path not in sys.path:
         sys.path.insert(0, path)
+
+import pytest  # noqa: E402  (after the XLA_FLAGS/path bootstrap above)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long fleet Monte-Carlo runs — excluded from the tier-1 "
+        "command; select explicitly with `-m slow`")
+
+
+def pytest_collection_modifyitems(config, items):
+    """Keep tier-1 fast: `slow` tests are skipped unless the caller passes
+    a marker expression (e.g. ``-m slow``) that opts into them."""
+    if config.getoption("-m"):
+        return
+    skip = pytest.mark.skip(reason="slow fleet Monte-Carlo: run with -m slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

@@ -1,0 +1,453 @@
+"""Sensor-lifetime subsystem tests (DESIGN.md §8).
+
+Covers the acceptance criteria of the lifetime PR:
+  * drift=None and an all-zero DriftConfig are bit-identical to the
+    non-aging engine across all four backends — including stream() with a
+    scheduler armed,
+  * evolve_chip at t = 0 is a bit-exact identity, is deterministic in
+    (config, chip_id), and drifts monotonically along the aging law,
+  * the drifted kernel-B per-channel operand keeps pallas <-> ref bit-exact
+    parity under jit (time-varying operands, same oracle),
+  * the params["chip"] runtime override is a bit-exact pass-through for the
+    identity chip on both hardware backends,
+  * the streaming step compiles ONCE while drift operands evolve across
+    microbatches (the no-recompilation criterion),
+  * the scheduler fires (periodic and rate-error-triggered), refreshes the
+    trim against the aged chip, recovers the activation-rate error, and
+    charges maintenance energy,
+  * fleet analysis: rate error grows with age on a stale trim, refreshing
+    recovers it, and time-to-failure improves (long runs are `slow`).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import frontend
+from repro import lifetime as lt
+from repro.core import p2m
+from repro.kernels import ops, ref
+from repro.kernels import p2m_conv as pk
+from repro.models import vision
+from repro.serving.vision import VisionEngine
+from repro.variation import (VariationConfig, channel_operands, identity_chip,
+                             sample_chip)
+
+CFG = p2m.P2MConfig()
+
+VPROFILE = VariationConfig(sigma_logit_offset=0.4, sigma_pixel_offset=0.25,
+                           sigma_pixel_gain=0.05, sigma_column=0.15)
+
+DPROFILE = lt.DriftConfig(sigma_logit_offset=0.2, sigma_logit_gain=0.05,
+                          sigma_r_p=0.03, sigma_tmr=0.03,
+                          tmr_retention=0.01, sigma_pixel_gain=0.03,
+                          pixel_gain_aging=0.01, sigma_pixel_offset=0.15,
+                          tau_frames=100.0, temp_amplitude_c=10.0,
+                          temp_period_frames=512.0)
+
+
+def _setup(seed=0, b=2, hw=32):
+    params = p2m.init_params(jax.random.PRNGKey(seed), CFG)
+    frame = jax.random.uniform(jax.random.PRNGKey(seed + 1), (b, hw, hw, 3))
+    return params, frame
+
+
+def _vis_setup(seed=0, b=4, variation=None):
+    cfg = vision.VisionConfig(name="t", arch="vgg_tiny", num_classes=10,
+                              variation=variation)
+    params = vision.init_params(jax.random.PRNGKey(seed), cfg)
+    frames = jax.random.uniform(jax.random.PRNGKey(seed + 1), (b, 32, 32, 3))
+    return cfg, params, frames
+
+
+class TestDriftConfig:
+    def test_enabled_and_scaled(self):
+        assert not lt.DriftConfig().enabled
+        assert DPROFILE.enabled
+        s = DPROFILE.scaled(2.0)
+        assert s.sigma_pixel_offset == pytest.approx(0.3)
+        assert s.temp_amplitude_c == pytest.approx(20.0)
+        assert s.tau_frames == DPROFILE.tau_frames      # not a rate
+        assert not DPROFILE.scaled(0.0).enabled
+
+    def test_aging_law(self):
+        assert float(lt.aging(0.0, 100.0)) == 0.0
+        a1 = float(lt.aging(1e3, 100.0))
+        a2 = float(lt.aging(1e5, 100.0))
+        assert 0 < a1 < a2          # monotone, log-slow
+
+    def test_temp_excursion_periodic(self):
+        d = dataclasses.replace(DPROFILE, temp_amplitude_c=12.0,
+                                temp_period_frames=64.0)
+        t = jnp.asarray(17.0)
+        np.testing.assert_allclose(
+            float(lt.temp_excursion_c(t, d)),
+            float(lt.temp_excursion_c(t + 64.0, d)), atol=1e-4)
+        assert abs(float(lt.temp_excursion_c(jnp.asarray(16.0), d))
+                   - 12.0) < 1e-4   # quarter period = peak amplitude
+
+
+class TestEvolveChip:
+    def test_t_zero_is_bit_exact_identity(self):
+        chip = sample_chip(VPROFILE, 32, 8, chip_id=2)
+        maps = lt.sample_drift_maps(DPROFILE, 32, 8, chip_id=2)
+        aged = lt.evolve_chip(chip, maps, jnp.float32(0.0), dcfg=DPROFILE)
+        for got, want in zip(aged, chip):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_zero_rate_config_short_circuits(self):
+        chip = sample_chip(VPROFILE, 16, 8, chip_id=1)
+        maps = lt.sample_drift_maps(DPROFILE, 16, 8, chip_id=1)
+        aged = lt.evolve_chip(chip, maps, jnp.float32(1e6),
+                              dcfg=lt.DriftConfig())
+        assert aged is chip          # identity object, not just equal values
+
+    def test_deterministic_maps_per_chip(self):
+        a = lt.sample_drift_maps(DPROFILE, 32, 8, chip_id=5)
+        b = lt.sample_drift_maps(DPROFILE, 32, 8, chip_id=5)
+        c = lt.sample_drift_maps(DPROFILE, 32, 8, chip_id=6)
+        for xa, xb in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+        assert float(jnp.max(jnp.abs(a.d_pixel_offset
+                                     - c.d_pixel_offset))) > 0
+
+    def test_drift_grows_with_age(self):
+        chip = identity_chip(32, 8)
+        maps = lt.sample_drift_maps(DPROFILE, 32, 8, chip_id=0)
+        d = dataclasses.replace(DPROFILE, temp_amplitude_c=0.0)  # monotone
+        deltas = []
+        for t in (1e2, 1e3, 1e5):
+            aged = lt.evolve_chip(chip, maps, jnp.float32(t), dcfg=d)
+            deltas.append(float(jnp.mean(jnp.abs(aged.pixel_offset))))
+        assert deltas[0] < deltas[1] < deltas[2]
+
+    def test_retention_closes_tmr_window(self):
+        chip = identity_chip(8, 8)
+        maps = lt.sample_drift_maps(DPROFILE, 8, 8, chip_id=0)
+        d = lt.DriftConfig(tmr_retention=0.05, tau_frames=100.0)
+        aged = lt.evolve_chip(chip, maps, jnp.float32(1e4), dcfg=d)
+        assert float(jnp.max(aged.tmr_scale)) < 1.0
+        # only the TMR family moves
+        np.testing.assert_array_equal(np.asarray(aged.pixel_offset),
+                                      np.asarray(chip.pixel_offset))
+
+    def test_extreme_age_stays_physical(self):
+        chip = sample_chip(VPROFILE, 16, 8, chip_id=3)
+        maps = lt.sample_drift_maps(DPROFILE, 16, 8, chip_id=3)
+        aged = lt.evolve_chip(chip, maps, jnp.float32(1e12),
+                              dcfg=DPROFILE.scaled(10.0))
+        for fld in ("mtj_logit_gain", "r_p_scale", "tmr_scale", "pixel_gain"):
+            assert float(jnp.min(getattr(aged, fld))) >= 0.05
+
+
+class TestDriftedKernelOperands:
+    def test_pallas_kernel_b_matches_ref_with_aged_chan(self):
+        """The time-varying per-channel operand keeps kernel <-> oracle
+        parity bit-exact under jit — the drifted pallas path needs no new
+        kernel, just new operand values."""
+        params, frame = _setup(seed=7, b=1, hw=16)
+        wq = p2m.quantize_weights(params["w"], CFG.weight_bits)
+        patches = ops._pad_to(ops.im2col(frame, CFG.kernel_size, CFG.stride),
+                              1, 128)
+        wm = ops._pad_to(ops._pad_to(
+            wq.reshape(-1, CFG.out_channels), 0, 128), 1, 128)
+        bits = jax.random.bits(jax.random.PRNGKey(8),
+                               (patches.shape[0], 128), jnp.uint32)
+        u, hp = pk.p2m_phase_a_pallas(patches, wm, jnp.ones((1, 1)),
+                                      block_n=64)
+        theta = pk.combine_hoyer_partials(hp, jnp.asarray(1.0))
+        chip = sample_chip(VPROFILE, CFG.out_channels, 8, chip_id=5)
+        maps = lt.sample_drift_maps(DPROFILE, CFG.out_channels, 8, chip_id=5)
+        for t in (3e2, 1e5):
+            aged = lt.evolve_chip(chip, maps, jnp.float32(t), dcfg=DPROFILE)
+            chan = ops._pad_to(
+                channel_operands(aged, jnp.linspace(-0.1, 0.1,
+                                                    CFG.out_channels)),
+                1, 128)
+            kw = dict(n_valid=8 * 8, c_valid=CFG.out_channels, chan=chan,
+                      block_n=64)
+            ak, vk = jax.jit(lambda *a: pk.p2m_phase_b_pallas(*a, **kw))(
+                u, theta.reshape(1, 1), bits)
+            ar, vr = jax.jit(lambda *a: ref.p2m_phase_b_ref(*a, **kw))(
+                u, theta, bits)
+            np.testing.assert_array_equal(np.asarray(ak), np.asarray(ar))
+            np.testing.assert_array_equal(np.asarray(vk), np.asarray(vr))
+
+
+class TestChipOverride:
+    @pytest.mark.parametrize("mode", ["device", "pallas"])
+    def test_identity_chip_override_is_bit_exact(self, mode):
+        """params["chip"] = identity maps + zero trim must be a bit-exact
+        pass-through — the invariant the aging engine's t = 0 step rests
+        on (its params pytree always carries the chip operand)."""
+        params, frame = _setup(seed=5)
+        key = jax.random.PRNGKey(6)
+        fe = frontend.SensorFrontend(frontend.FrontendConfig(p2m=CFG))
+        with_chip = {**params, "chip": identity_chip(CFG.out_channels, 8),
+                     "cal_trim": jnp.zeros((CFG.out_channels,))}
+        a0, x0 = fe(params, frame, key=key, mode=mode)
+        a1, x1 = fe(with_chip, frame, key=key, mode=mode)
+        np.testing.assert_array_equal(np.asarray(a0), np.asarray(a1))
+        for k in x0:
+            np.testing.assert_array_equal(np.asarray(x0[k]),
+                                          np.asarray(x1[k]))
+
+    def test_override_wins_over_config_chip(self):
+        """A runtime chip must shadow the config-sampled one: simulating the
+        config chip through the override equals configuring it directly."""
+        params, frame = _setup(seed=8)
+        key = jax.random.PRNGKey(9)
+        fe_cfg = frontend.SensorFrontend(frontend.FrontendConfig(
+            p2m=CFG, variation=VPROFILE, chip_id=4))
+        fe_nom = frontend.SensorFrontend(frontend.FrontendConfig(p2m=CFG))
+        chip = sample_chip(VPROFILE, CFG.out_channels, 8, chip_id=4)
+        a_cfg, _ = fe_cfg(params, frame, key=key, mode="device")
+        a_ovr, _ = fe_nom({**params, "chip": chip}, frame, key=key,
+                          mode="device")
+        np.testing.assert_array_equal(np.asarray(a_cfg), np.asarray(a_ovr))
+
+    def test_analog_draws_noise_from_override_chip(self):
+        params, frame = _setup(seed=11, b=4)
+        key = jax.random.PRNGKey(12)
+        fe = frontend.SensorFrontend(frontend.FrontendConfig(p2m=CFG))
+        big = dataclasses.replace(VPROFILE, sigma_logit_offset=2.0)
+        outs = [fe({**params,
+                    "chip": sample_chip(big, CFG.out_channels, 8, cid)},
+                   frame, key=key, mode="analog")[0]
+                for cid in (0, 1)]
+        assert float(jnp.mean(jnp.abs(outs[0] - outs[1]))) > 0.0
+
+
+class TestEngineBitIdentical:
+    """Acceptance: drift=None / all-zero drift leaves stream() bit-identical
+    — with the scheduler armed — across all four backends."""
+
+    @pytest.mark.parametrize("mode", ["device", "pallas", "analog", "ideal"])
+    def test_stream_with_inert_lifetime_matches_plain(self, mode):
+        cfg, params, frames = _vis_setup(variation=VPROFILE)
+        pol = lt.SchedulePolicy(period_frames=2)
+        plain = VisionEngine(cfg, params, backend=mode, microbatch=2)
+        for drift in (None, lt.DriftConfig()):
+            aging_eng = VisionEngine(cfg, params, backend=mode, microbatch=2,
+                                     drift=drift, schedule=pol,
+                                     calibration_frames=frames)
+            o_p = list(plain.stream([frames]))[0]
+            o_a = list(aging_eng.stream([frames]))[0]
+            np.testing.assert_array_equal(np.asarray(o_p["labels"]),
+                                          np.asarray(o_a["labels"]))
+            np.testing.assert_array_equal(np.asarray(o_p["probs"]),
+                                          np.asarray(o_a["probs"]))
+            plain = VisionEngine(cfg, params, backend=mode, microbatch=2)
+
+    def test_recal_firing_never_perturbs_key_sequence(self):
+        """Same frames + same seed => same labels whether or not a
+        recalibration fired (drift=None): the refresh is deterministic and
+        key-free, so the rng sequence of the draws cannot move."""
+        cfg, params, frames = _vis_setup()
+        batches = [frames, frames, frames]
+        e1 = VisionEngine(cfg, params, backend="device", microbatch=2)
+        e2 = VisionEngine(cfg, params, backend="device", microbatch=2,
+                          drift=None,
+                          schedule=lt.SchedulePolicy(period_frames=2),
+                          calibration_frames=frames)
+        for o1, o2 in zip(e1.stream(batches), e2.stream(batches)):
+            np.testing.assert_array_equal(np.asarray(o1["labels"]),
+                                          np.asarray(o2["labels"]))
+
+    def test_firing_recal_is_key_free_and_deterministic(self):
+        """The strong form with drift ENABLED and refreshes actually
+        firing: the scheduler consumes no rng state (frame counter and key
+        sequence match a scheduler-less twin) and the refresh itself is a
+        pure function of the aged chip (same chip => bit-identical trim)."""
+        cfg, params, frames = _vis_setup(variation=VPROFILE)
+        pol = lt.SchedulePolicy(period_frames=4, cal_iters=6)
+        armed = VisionEngine(cfg, params, backend="device", microbatch=2,
+                             drift=DPROFILE, schedule=pol,
+                             calibration_frames=frames)
+        plain = VisionEngine(cfg, params, backend="device", microbatch=2,
+                             drift=DPROFILE)
+        list(armed.stream([frames, frames]))
+        list(plain.stream([frames, frames]))
+        assert armed.lifetime.recal_count >= 1
+        assert armed._frame_count == plain._frame_count
+        np.testing.assert_array_equal(np.asarray(armed._key),
+                                      np.asarray(plain._key))
+        # refresh determinism: re-solving the same aged chip reproduces the
+        # programmed trim bit-exactly
+        st = armed.lifetime
+        aged = armed._evolve(st.chip0, st.maps,
+                             jnp.asarray(st.last_recal_frame, jnp.float32))
+        np.testing.assert_array_equal(
+            np.asarray(armed._scheduler._solve(aged)), np.asarray(st.trim))
+
+
+class TestEngineLifetime:
+    def _aging_engine(self, backend="device", schedule=None, drift=DPROFILE,
+                      microbatch=2):
+        cfg, params, frames = _vis_setup(variation=VPROFILE)
+        eng = VisionEngine(cfg, params, backend=backend,
+                           microbatch=microbatch, drift=drift,
+                           schedule=schedule, calibration_frames=frames)
+        return eng, frames
+
+    def test_frame_clock_advances_per_microbatch(self):
+        eng, frames = self._aging_engine()
+        list(eng.stream([frames, frames]))
+        assert eng.lifetime.age_frames == 8
+
+    def test_pinned_key_replay_does_not_age_the_chip(self):
+        eng, frames = self._aging_engine(microbatch=None)
+        eng.classify(frames)
+        age = eng.lifetime.age_frames
+        eng.classify(frames, key=jax.random.PRNGKey(99))     # replay
+        assert eng.lifetime.age_frames == age
+
+    def test_lifetime_telemetry_keys(self):
+        eng, frames = self._aging_engine(
+            schedule=lt.SchedulePolicy(period_frames=4, cal_iters=4))
+        (out,) = list(eng.stream([frames]))
+        for k in ("lifetime_age_frames", "lifetime_recal_count",
+                  "lifetime_recal_fired", "lifetime_rate_err",
+                  "lifetime_recal_energy_pj"):
+            assert k in out, k
+        # cumulative counters merge by LAST value: the batch-level numbers
+        # are the engine's true running state, not a microbatch average
+        assert float(out["lifetime_age_frames"]) == eng.lifetime.age_frames
+        assert (float(out["lifetime_recal_count"])
+                == eng.lifetime.recal_count)
+        assert float(out["lifetime_recal_fired"]) == 1.0   # fired this batch
+
+    def test_drift_changes_hardware_outputs_over_time(self):
+        """An aging chip must eventually classify differently from frame 1
+        — the probs at a large age differ from the probs at birth."""
+        cfg, params, frames = _vis_setup(variation=VPROFILE)
+        big = dataclasses.replace(DPROFILE, tau_frames=1.0,
+                                  sigma_pixel_offset=1.0)
+        eng = VisionEngine(cfg, params, backend="device", drift=big)
+        key = jax.random.PRNGKey(3)
+        young = eng._classify(frames, key=key, advance=True)
+        eng.lifetime.age_frames = 10 ** 6
+        old = eng._classify(frames, key=key, advance=True)
+        assert not np.array_equal(np.asarray(young["probs"]),
+                                  np.asarray(old["probs"]))
+
+    @pytest.mark.parametrize("backend", ["device", "pallas"])
+    def test_streaming_step_compiles_once_while_aging(self, backend):
+        """Acceptance: drift operands evolve every microbatch (and a
+        recalibration fires mid-stream) yet the jitted step compiles
+        exactly once — drift state is data, never a static."""
+        eng, frames = self._aging_engine(
+            backend=backend,
+            schedule=lt.SchedulePolicy(period_frames=4, cal_iters=4))
+        list(eng.stream([frames, frames, frames]))
+        assert eng.lifetime.recal_count >= 1     # a refresh really happened
+        assert eng._step._cache_size() == 1
+
+    def test_periodic_schedule_fires_and_charges_energy(self):
+        eng, frames = self._aging_engine(
+            schedule=lt.SchedulePolicy(period_frames=4, cal_iters=6))
+        outs = list(eng.stream([frames, frames]))
+        st = eng.lifetime
+        assert st.recal_count == 2               # every 4 frames, 8 served
+        assert st.last_recal_frame == 8
+        assert st.recal_energy_pj > 0
+        assert float(jnp.max(jnp.abs(st.trim))) > 0
+        assert any(float(o["lifetime_recal_fired"]) > 0 for o in outs)
+
+    def test_triggered_schedule_fires_on_rate_drift(self):
+        """Rate-error trigger: a fast offset-drifting chip moves its
+        channel rates away from the post-baseline EMA and fires; with no
+        drift the same policy never fires. The threshold sits above the
+        Bernoulli sampling-noise floor of the rate monitor (~1e-2 at this
+        microbatch size) — condition-based maintenance must not be paged
+        by shot noise."""
+        pol = lt.SchedulePolicy(rate_err_threshold=0.05,
+                                min_interval_frames=4, cal_iters=4, ema=0.5)
+        fast = lt.DriftConfig(sigma_pixel_offset=2.0, tau_frames=2.0)
+        eng, frames = self._aging_engine(schedule=pol, drift=fast)
+        list(eng.stream([frames, frames, frames]))
+        assert eng.lifetime.recal_count >= 1
+        # same trigger on an (almost) drift-free chip: never fires
+        still = lt.DriftConfig(sigma_pixel_offset=1e-6, tau_frames=1e9)
+        eng2, frames2 = self._aging_engine(schedule=pol, drift=still)
+        list(eng2.stream([frames2, frames2, frames2]))
+        assert eng2.lifetime.recal_count == 0
+
+    def test_recalibration_recovers_rate_error(self):
+        """The refreshed trim measurably re-centres the aged chip's
+        activation rates (the scheduler's audit hook)."""
+        pol = lt.SchedulePolicy(period_frames=10 ** 9, cal_iters=12)
+        eng, frames = self._aging_engine(schedule=pol)
+        st = eng.lifetime
+        st.age_frames = 10 ** 5
+        aged = eng._evolve(st.chip0, st.maps,
+                           jnp.asarray(st.age_frames, jnp.float32))
+        sch = eng._scheduler
+        err_stale = sch.rate_error(aged, st.trim)
+        err_fresh = sch.rate_error(aged, sch.recalibrate(aged))
+        assert err_fresh < 0.5 * err_stale
+
+    def test_scheduler_requires_cal_frames_and_a_policy(self):
+        cfg, params, frames = _vis_setup()
+        with pytest.raises(ValueError):
+            VisionEngine(cfg, params, drift=DPROFILE,
+                         schedule=lt.SchedulePolicy(period_frames=4))
+        assert not lt.SchedulePolicy().enabled
+        with pytest.raises(ValueError):
+            VisionEngine(cfg, params, drift=DPROFILE,
+                         schedule=lt.SchedulePolicy(),
+                         calibration_frames=frames)
+
+
+class TestFleet:
+    def test_rate_error_grows_and_recal_recovers(self):
+        params, frames = _setup(seed=14, b=4)
+        ages = (0.0, 1e3, 1e5)
+        surf = lt.rate_error_vs_age(params, CFG, VPROFILE, DPROFILE, frames,
+                                    ages, n_chips=3, iters=10)
+        stale = surf["err_stale_mean"].mean(axis=0)
+        recal = surf["err_recal_mean"].mean(axis=0)
+        assert stale[2] > stale[1] > stale[0]     # aging hurts
+        assert recal[2] < 0.5 * stale[2]          # refreshing recovers
+        assert surf["err_stale_worst"].shape == (3, len(ages))
+
+    def test_time_to_failure_distribution(self):
+        ages = (0.0, 10.0, 100.0, 1000.0)
+        err = np.array([[0.0, 0.01, 0.2, 0.3],     # fails at age 100
+                        [0.0, 0.0, 0.0, 0.0],      # never fails
+                        [0.0, 0.2, 0.3, 0.4]])     # fails at age 10
+        ttf = lt.time_to_failure(err, ages, budget=0.05)
+        assert ttf["survivor_fraction"] == pytest.approx(1 / 3)
+        assert ttf["ttf_frames_p50"] == pytest.approx(100.0)
+
+    @pytest.mark.slow
+    def test_fleet_monte_carlo_full(self):
+        """Long fleet MC (deselected from tier-1; run with -m slow): a
+        larger fleet over a denser age grid, stale-vs-recal separation and
+        ttf ordering."""
+        params, frames = _setup(seed=15, b=8)
+        ages = (0.0, 3e2, 1e3, 1e4, 1e5, 1e6)
+        surf = lt.rate_error_vs_age(params, CFG, VPROFILE, DPROFILE, frames,
+                                    ages, n_chips=16, iters=12)
+        stale = lt.time_to_failure(surf["err_stale_worst"], ages, 0.05)
+        recal = lt.time_to_failure(surf["err_recal_worst"], ages, 0.05)
+        assert recal["survivor_fraction"] >= stale["survivor_fraction"]
+        assert recal["ttf_frames_p50"] >= stale["ttf_frames_p50"]
+
+    @pytest.mark.slow
+    def test_accuracy_vs_age_runs_end_to_end(self):
+        """Structural end-to-end check of the expensive device-backend
+        sweep (accuracy ordering needs a trained net — that lives in
+        benchmarks/lifetime_bench.py)."""
+        cfg, params, frames = _vis_setup(b=8)
+        batches = [{"image": frames,
+                    "label": jnp.zeros((8,), jnp.int32)}]
+        rows = lt.accuracy_vs_age(params, cfg, batches, vcfg=VPROFILE,
+                                  dcfg=DPROFILE, ages=(0.0, 1e4),
+                                  n_chips=1, calibration_frames=frames,
+                                  key=jax.random.PRNGKey(0), cal_iters=6)
+        assert [r["age_frames"] for r in rows] == [0.0, 1e4]
+        assert all(0.0 <= r["acc_stale"] <= 1.0
+                   and 0.0 <= r["acc_recal"] <= 1.0 for r in rows)

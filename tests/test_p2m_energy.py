@@ -131,3 +131,45 @@ class TestEnergyBandwidth:
         rep = energy.energy_report()
         fe = rep["frontend_pj"]
         assert fe["ours"] < fe["in_sensor"] and fe["ours"] < fe["baseline"]
+
+
+class TestRecalibrationEnergy:
+    """Satellite of the lifetime PR: maintenance energy in the model."""
+
+    def test_recalibration_energy_positive_and_scales(self):
+        e1 = energy.recalibration_energy_pj(n_cal_frames=16,
+                                            bisection_iters=8)
+        e2 = energy.recalibration_energy_pj(n_cal_frames=32,
+                                            bisection_iters=8)
+        e3 = energy.recalibration_energy_pj(n_cal_frames=16,
+                                            bisection_iters=16)
+        assert 0 < e1 < e2 and e1 < e3
+        # each bisection iteration re-exposes the calibration frames: the
+        # exposure term dominates and is linear in frames x iters
+        fe = energy.frontend_energy_ours()
+        assert e2 - e1 == pytest.approx(16 * 8 * fe, rel=1e-9)
+
+    def test_trim_dac_term_accounted(self):
+        f = energy.VGG16_IMAGENET
+        c0 = energy.EnergyConstants(e_trim_dac_write_pj=0.0)
+        c1 = energy.EnergyConstants(e_trim_dac_write_pj=2.5)
+        d = (energy.recalibration_energy_pj(f, c1, n_cal_frames=1,
+                                            bisection_iters=1)
+             - energy.recalibration_energy_pj(f, c0, n_cal_frames=1,
+                                              bisection_iters=1))
+        assert d == pytest.approx(f.c_out * 2.5, rel=1e-9)
+
+    def test_energy_report_includes_recalibration(self):
+        rep = energy.energy_report()
+        assert rep["recalibration_pj"] == pytest.approx(
+            energy.recalibration_energy_pj(), rel=1e-9)
+
+    def test_maintenance_amortizes_with_period(self):
+        short = energy.maintenance_energy_per_frame_pj(
+            recal_period_frames=1e3)
+        long = energy.maintenance_energy_per_frame_pj(
+            recal_period_frames=1e6)
+        assert long < short
+        # at a sane maintenance period the upkeep is a small fraction of
+        # the per-frame frontend energy
+        assert long / energy.frontend_energy_ours() < 0.05

@@ -104,3 +104,62 @@ class TestMicrobatchedStream:
         outs = list(eng.stream([_frames(b=2), _frames(b=2, seed=9)]))
         assert len(outs) == 2
         assert all(o["labels"].shape == (2,) for o in outs)
+
+
+class TestStreamEdgeCases:
+    """The stream() corners the lifetime state machine leans on."""
+
+    def test_non_divisible_microbatch_remainder(self):
+        """b=5 over mb=2 -> chunks (2, 2, 1): per-example arrays concatenate
+        back to 5 and the tail chunk is weighted 1/5 (not 1/3) in the
+        scalar merge."""
+        _, _, eng = _engine_fixture(backend="device", microbatch=2)
+        frames = _frames(b=5)
+        (out,) = list(eng.stream([frames]))
+        assert out["labels"].shape == (5,)
+        assert out["probs"].shape == (5, 10)
+        assert jnp.ndim(out["p2m_sparsity"]) == 0
+        # remainder weighting: sparsity is the frame-weighted mean of the
+        # chunks, which equals the mean over per-chunk recomputation only
+        # when the weights are frame counts
+        assert 0.0 <= float(out["p2m_sparsity"]) <= 1.0
+
+    def test_empty_batch_iterable_yields_nothing(self):
+        _, _, eng = _engine_fixture(backend="device", microbatch=2)
+        assert list(eng.stream([])) == []
+        assert list(eng.stream(iter([]))) == []
+        assert eng._frame_count == 0          # nothing consumed a key
+
+    def test_channel_rates_merge_is_weighted_mean_not_concat(self):
+        """channel_rates is a per-CHANNEL vector: merging microbatches must
+        reduce it (frame-weighted), never concatenate it."""
+        _, _, eng = _engine_fixture(backend="device", microbatch=2)
+        frames = _frames(b=6)
+        (out,) = list(eng.stream([frames]))
+        assert out["channel_rates"].shape == (32,)   # C, not 3 chunks x C
+        assert 0.0 <= float(jnp.min(out["channel_rates"]))
+        assert float(jnp.max(out["channel_rates"])) <= 1.0
+
+
+class TestServingTelemetry:
+    """Satellite: wall-clock/throughput counters + modeled sensor latency
+    in every output, independent of the drift feature."""
+
+    def test_classify_reports_throughput_and_sensor_budget(self):
+        _, _, eng = _engine_fixture(backend="device")
+        out = eng.classify(_frames(b=4))
+        assert out["wall_ms"] > 0
+        assert out["throughput_fps"] > 0
+        # modeled sensor-side budget (core/energy.frame_latency_us) is a
+        # constant of the engine's frame geometry
+        assert out["sensor_latency_us"] > 0
+        assert out["sensor_fps"] == pytest.approx(
+            1e6 / out["sensor_latency_us"], rel=1e-6)
+
+    def test_stream_merges_telemetry_to_scalars(self):
+        _, _, eng = _engine_fixture(backend="device", microbatch=2)
+        (out,) = list(eng.stream([_frames(b=6)]))
+        for k in ("wall_ms", "throughput_fps", "sensor_latency_us",
+                  "sensor_fps"):
+            assert jnp.ndim(out[k]) == 0, k
+            assert float(out[k]) > 0, k

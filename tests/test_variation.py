@@ -91,6 +91,32 @@ class TestChipSampling:
         assert s.column_corr == PROFILE.column_corr   # not a sigma
         assert not VariationConfig().enabled and PROFILE.enabled
 
+    def test_scaled_zero_samples_the_identity_chip(self):
+        """scaled(0.0) is not just 'small': every map must equal the
+        identity chip exactly (sigma * draw == 0), at any chip_id."""
+        zero = PROFILE.scaled(0.0)
+        assert not zero.enabled
+        ident = identity_chip(32, 8)
+        for cid in (0, 7):
+            chip = sample_chip(zero, 32, 8, chip_id=cid)
+            for got, want in zip(chip, ident):
+                np.testing.assert_array_equal(np.asarray(got),
+                                              np.asarray(want))
+
+    def test_identity_chip_operands_are_identity_operands(self):
+        """channel_operands(identity_chip) == identity_operands bit-exact —
+        the invariant that makes the always-present chip operand of an
+        aging engine a free pass-through in kernel B."""
+        for c in (8, 32):
+            np.testing.assert_array_equal(
+                np.asarray(channel_operands(identity_chip(c, 8))),
+                np.asarray(identity_operands(c)))
+            # and with an explicit zero trim folded in
+            np.testing.assert_array_equal(
+                np.asarray(channel_operands(identity_chip(c, 8),
+                                            jnp.zeros((c,)))),
+                np.asarray(identity_operands(c)))
+
 
 class TestPhysicsHooks:
     def test_switching_logit_offset_gain_broadcast(self):
