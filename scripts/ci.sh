@@ -8,9 +8,15 @@
 # warning raised from their package (repro.variation / repro.lifetime) to
 # an error. Long fleet Monte-Carlo tests are marked `slow` and excluded
 # from the tier-1 run (use `-m slow` to run them).
+# The frontend perf-regression smoke runs FIRST and cheap: the --quick
+# census gate fails the build if the pallas dot/conv structure or matmul
+# flop budget drifts (wall clock stays informational — no flaky timing
+# gates on shared hosts).
 # Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/frontend_bench.py --quick
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/frontend_bench.py --smoke --out BENCH_frontend.json

@@ -139,6 +139,31 @@ def reset_probability(params: MTJParams = DEFAULT_MTJ) -> jax.Array:
     return p_v  # envelope is at its peak for the reset pulse by construction
 
 
+# --- folded Bernoulli draw (kernels + oracles) ------------------------------
+
+# dtype of the pre-generated uniform words feeding the folded majority draw.
+# 16 bits per draw: the probability is quantized to 1/65536 (bias <= 1.5e-5,
+# far below the Monte-Carlo noise of any statistic this repo reports, and
+# far more entropy than a physical in-sensor RNG would budget per pixel),
+# and generating half the random words halves the dominant rng cost of the
+# pallas serving step (threefry is ~0.2 ms per 131k uint32 words on the
+# interpret-mode CPU target — DESIGN.md §9).
+DRAW_BITS_DTYPE = jnp.uint16
+_DRAW_SCALE = 1.0 / 2 ** 16
+
+
+def bernoulli_from_bits(bits: jax.Array, q: jax.Array) -> jax.Array:
+    """One Bernoulli(q) draw per element from pre-generated uniform words.
+
+    ``bits`` is ``DRAW_BITS_DTYPE``; the draw fires when the word, mapped to
+    [0, 1), falls below q. The SINGLE source of the draw expression for the
+    Pallas kernels, their oracles (kernels/ref.py), and the legacy baseline
+    — kernel<->oracle bit-parity rests on all of them tracing this one
+    function. Returns float {0,1}.
+    """
+    return ((bits.astype(jnp.float32) * _DRAW_SCALE) < q).astype(jnp.float32)
+
+
 # --- multi-MTJ majority statistics (Fig. 5) ---------------------------------
 
 def _binom_pmf(k: jax.Array, n: int, p: jax.Array) -> jax.Array:
@@ -185,9 +210,55 @@ def majority_prob_hetero(p_devices: jax.Array, majority: int) -> jax.Array:
     (..., n); unlike ``majority_prob_poly`` the devices need not share one
     P_sw, which is exactly the device-variation case (repro/variation): each
     of the n redundant MTJs in a kernel sits at its own process corner.
-    Computed by the standard dynamic-programming convolution over devices
-    (multiply/add only — exact at p in {0, 1}); for identical devices it
-    reduces to ``majority_prob_poly`` (property-tested).
+
+    Computed by a *batched pairwise tree* convolution of the per-device PMFs
+    (multiply/add only — exact at p in {0, 1}): devices are padded to a
+    power of two with phantom p = 0 devices (a delta at 0 — an exact no-op
+    for the tail sum), then each level multiplies all polynomial pairs AT
+    ONCE on a vectorized pair axis. Depth is ceil(log2 n) levels instead of
+    the old scan-shaped DP's n sequential full-width steps — the DP made
+    ``majority_prob_hetero`` the hot spot of the device/calibration paths
+    (8 sequential (..., n+1)-wide multiply-adds per call at n = 8); the tree
+    runs 3 batched levels. The legacy DP is retained as
+    ``majority_prob_hetero_dp`` (benchmark baseline + property-test cross
+    check). For identical devices both reduce to ``majority_prob_poly``
+    (property-tested).
+    """
+    n = p_devices.shape[-1]
+    dtype = jnp.result_type(p_devices, jnp.float32)
+    p = jnp.asarray(p_devices, dtype)
+    n2 = 1 << max(n - 1, 0).bit_length()          # next power of two
+    if n2 > n:
+        # phantom devices with p = 0: PMF is a delta at 0 successes, so the
+        # padded Poisson binomial has the identical tail probabilities
+        p = jnp.concatenate(
+            [p, jnp.zeros(p.shape[:-1] + (n2 - n,), dtype)], axis=-1)
+    # per-device degree-1 PMFs on a trailing coefficient axis: (..., n2, 2)
+    pmf = jnp.stack([1.0 - p, p], axis=-1)
+    m = n2
+    while m > 1:
+        half = m // 2
+        a = pmf[..., :half, :]                    # (..., half, L)
+        b = pmf[..., half:, :]
+        length = a.shape[-1]
+        out = jnp.zeros(a.shape[:-1] + (2 * length - 1,), dtype)
+        # polynomial product of every pair at once; the short loop runs over
+        # the (small, static) coefficient count, not over devices
+        for i in range(length):
+            out = out.at[..., i:i + length].add(a[..., i:i + 1] * b)
+        pmf = out
+        m = half
+    pmf = pmf[..., 0, :]                          # (..., n2 + 1)
+    return jnp.sum(pmf[..., majority:], axis=-1)
+
+
+def majority_prob_hetero_dp(p_devices: jax.Array, majority: int) -> jax.Array:
+    """The pre-vectorization scan-shaped DP (BENCHMARK/TEST-ONLY).
+
+    n sequential full-width multiply-add steps over the (..., n+1) PMF —
+    retained so ``benchmarks/frontend_bench.py`` can measure the tree
+    rewrite against it and the property tests can cross-check both against
+    ``majority_prob_poly``. Production callers use ``majority_prob_hetero``.
     """
     n = p_devices.shape[-1]
     pmf = jnp.zeros(p_devices.shape[:-1] + (n + 1,),

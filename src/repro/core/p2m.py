@@ -75,6 +75,37 @@ def phase_conv(x: jax.Array, w: jax.Array, stride: int) -> jax.Array:
 _phase_conv = phase_conv
 
 
+def relu_split_pack(w: jax.Array) -> jax.Array:
+    """(…, C) signed weights -> (…, 2C): ``[w⁺, w⁻]`` on the last axis.
+
+    THE phase-packing convention, single-sourced: channels [0, C) are the
+    positive-phase weights ``max(w, 0)``, channels [C, 2C) the
+    negative-phase ``max(-w, 0)``. ``packed_phase_conv`` (analog/device
+    backends) and the Pallas kernels' ``pack_phase_weights`` both build
+    their packed operand here, so the two execution paths can never
+    disagree about which half is which phase. Output channel j of a
+    conv/dot depends only on operand slice j, so splitting a packed result
+    reproduces the two separate passes bit-exactly.
+    """
+    return jnp.concatenate([jnp.maximum(w, 0.0), jnp.maximum(-w, 0.0)],
+                           axis=-1)
+
+
+def packed_phase_conv(x: jax.Array, wq: jax.Array, stride: int
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Both integration phases in ONE convolution: ``(mac_pos, mac_neg)``.
+
+    The relu-split weight tensors are concatenated on the output-channel
+    axis (``relu_split_pack``), so the HLO holds a single 2C-channel
+    convolution instead of two C-channel ones — each input pixel is read
+    once (``conv_count: 1``, the same packing trick the Pallas kernel A
+    uses on its matmul operand).
+    """
+    c = wq.shape[-1]
+    y = phase_conv(x, relu_split_pack(wq), stride)
+    return y[..., :c], y[..., c:]
+
+
 def hardware_conv(x: jax.Array, w: jax.Array, cfg: P2MConfig, *,
                   curve_gain: jax.Array | None = None,
                   out_offset: jax.Array | None = None) -> jax.Array:
@@ -82,7 +113,10 @@ def hardware_conv(x: jax.Array, w: jax.Array, cfg: P2MConfig, *,
 
     Phase 1 integrates the negative-weight transistors, phase 2 the positive
     ones; each accumulated bitline voltage sees the Fig. 4a curve, then the
-    passive subtractor forms the difference.
+    passive subtractor forms the difference. The two phases run as ONE
+    packed convolution (``packed_phase_conv``) — the analog/device backends
+    used to show ``conv_count: 2`` in the HLO census for what is physically
+    a single sweep over the pixel array.
 
     ``curve_gain`` perturbs the pixel transfer curve per output channel (the
     ``pixel.get_curve`` mismatch hook — applied to BOTH phases, so for a
@@ -92,8 +126,7 @@ def hardware_conv(x: jax.Array, w: jax.Array, cfg: P2MConfig, *,
     unperturbed physics, bit-identical to before the hooks existed.
     """
     wq = quantize_weights(w, cfg.weight_bits)
-    mac_pos = phase_conv(x, jnp.maximum(wq, 0.0), cfg.stride)
-    mac_neg = phase_conv(x, jnp.maximum(-wq, 0.0), cfg.stride)
+    mac_pos, mac_neg = packed_phase_conv(x, wq, cfg.stride)
     if curve_gain is None and out_offset is None:
         return pixel.hardware_conv_output(mac_pos, mac_neg, cfg.pixel)
     g = pixel.get_curve(cfg.pixel.curve, cfg.pixel, gain=curve_gain)

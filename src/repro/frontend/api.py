@@ -113,11 +113,18 @@ class FrontendConfig:
     # aged chip, DESIGN.md §8).
     variation: Optional[VariationConfig] = None
     chip_id: int = 0              # which chip of the population this is
-    block_n: int = 512            # kernel-A patch-row block (the MXU matmul
-                                  # tile; ~0.6 MB VMEM/block at K=C=128)
-    block_n_elem: int = 4096      # kernel-B row-block cap (elementwise, no
-                                  # MXU tile: bigger blocks amortize dispatch;
-                                  # ~6 MB VMEM/block at C=128)
+    # Pallas tile selection (kernels/autotune.py): None (the default) defers
+    # to the per-shape autotuner table — a tuned entry if this process ran
+    # the search or loaded a persisted table (``autotune.load_table``;
+    # benchmarks/frontend_bench.py writes one next to BENCH_frontend.json,
+    # and ``VisionEngine(tile_table=...)`` loads it at construction),
+    # deterministic heuristic otherwise. Explicit values pin the tiles
+    # (tests, ablations).
+    block_n: Optional[int] = None       # kernel-A patch-row block target
+                                        # (implicit-im2col MXU tile)
+    block_n_elem: Optional[int] = None  # kernel-B row-block cap (elementwise,
+                                        # no MXU tile: bigger amortizes
+                                        # dispatch)
 
 
 class SensorFrontend:
@@ -145,9 +152,16 @@ class SensorFrontend:
             acts, shutter_aux = shutter.global_shutter_readout(
                 acts, self.cfg.p2m.mtj, frames=acts.shape[0])
             aux = {**aux, **shutter_aux}
-        aux["sparsity"] = p2m.output_sparsity(acts)
-        # per-channel activation rates of the map as READ OUT (post shutter
-        # on hardware backends) — the lifetime scheduler's monitoring signal
-        aux["channel_rates"] = jnp.mean(
-            acts, axis=tuple(range(acts.ndim - 1)))
+        if "channel_rates" not in aux:
+            # per-channel activation rates of the map as READ OUT — the
+            # lifetime scheduler's monitoring signal. A backend may provide
+            # them itself (the fused streaming kernel emits per-block
+            # channel partials, sparing this whole-map reduction); the
+            # burst read is the identity on clean {0,1} states, so
+            # kernel-side (pre-shutter) rates equal the read-out rates.
+            aux["channel_rates"] = jnp.mean(
+                acts, axis=tuple(range(acts.ndim - 1)))
+        # output sparsity = 1 - mean rate (channels are equally populated),
+        # derived from the rate vector instead of a second whole-map pass
+        aux["sparsity"] = 1.0 - jnp.mean(aux["channel_rates"])
         return acts, aux

@@ -225,10 +225,22 @@ def pallas_backend(cfg: FrontendConfig, params: dict, images: jax.Array,
         # multiply-adds, nothing else changes (DESIGN.md §7)
         chan = chip_mod.channel_operands(chip, trim)
     wq = p2m.quantize_weights(params["w"], pcfg.weight_bits)
-    o, kernel_aux = ops.p2m_frontend(
-        images, wq, params["v_th"], key,
-        kernel=pcfg.kernel_size, stride=pcfg.stride, chan=chan,
-        pixel_params=pcfg.pixel, mtj_params=pcfg.mtj,
-        interpret=cfg.interpret, block_n=cfg.block_n,
-        block_n_elem=cfg.block_n_elem)
+    kw = dict(kernel=pcfg.kernel_size, stride=pcfg.stride, chan=chan,
+              pixel_params=pcfg.pixel, mtj_params=pcfg.mtj,
+              interpret=cfg.interpret, block_n=cfg.block_n,
+              block_n_elem=cfg.block_n_elem)
+    carry = params.get("theta_carry")
+    if carry is not None:
+        # fused streaming step (DESIGN.md §9): one kernel, the draws run at
+        # the CARRIED threshold riding in params (an array operand — the
+        # streaming engine injects a fresh EMA every microbatch against ONE
+        # compilation). aux still carries the FRESH theta for the engine's
+        # drift guard. Only VisionEngine.stream() plants this key; every
+        # other call path takes the exact two-kernel pipeline below,
+        # bit-identical to the non-streaming contract.
+        o, kernel_aux = ops.p2m_frontend_fused(
+            images, wq, params["v_th"], carry, key, **kw)
+    else:
+        o, kernel_aux = ops.p2m_frontend(
+            images, wq, params["v_th"], key, **kw)
     return o, {"hoyer_loss": jnp.zeros(()), **kernel_aux}

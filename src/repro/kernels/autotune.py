@@ -1,0 +1,253 @@
+"""Tile autotuner for the P2M frontend kernels (DESIGN.md §9).
+
+The frontend's execution shape is fixed per deployment — one sensor
+geometry, one serving batch — so tile selection is a per-shape table, not a
+per-call search:
+
+  * ``TileChoice(block_n, block_n_elem, fused)`` — the kernel-A patch-row
+    block target, the kernel-B elementwise row-block cap, and whether the
+    fused single-kernel streaming path beats the two-kernel pipeline for
+    this shape.
+  * an IN-PROCESS table keyed by ``(N, K, C)`` = (patch rows, k*k*C_in,
+    C_out). ``resolve`` is the only consumer-facing read: explicit caller
+    values win, then a tuned/loaded entry, then the deterministic heuristic
+    default — and whatever it returns is recorded, so the same shape always
+    resolves to the same tiles for the life of the process (a jitted caller
+    can never see two different blockings for one shape, which is what
+    keeps the jit cache at one entry per shape).
+  * ``autotune_frontend`` — the actual search: times ``ops.p2m_frontend``
+    (and the fused streaming step) over a deterministic candidate grid and
+    stores the winner. Timing is the ONLY nondeterministic ingredient, and
+    it is quarantined here: nothing in the serving/test path ever triggers
+    a measurement implicitly.
+  * ``save_table`` / ``load_table`` — JSON persistence, so a deployment
+    tunes once (e.g. in ``benchmarks/frontend_bench.py``, which reports the
+    search) and ships the table.
+
+Heuristic default: the largest whole-row block that keeps a single MXU pass
+per step without collapsing the grid to one step (``block_n = min(n // 2,
+4096)``) — on the interpret-mode CPU target fewer grid steps win, and on a
+real TPU the same shape keeps VMEM per step at ``block_n * (K + 2C)`` floats
+(~1.7 MB at the paper's geometry), comfortably under budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Callable, Dict, Iterable, Optional, Tuple
+
+TuneKey = Tuple[int, int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class TileChoice:
+    """One tuned configuration for one frontend shape.
+
+    ``block_n`` tiles the EXACT path's kernel A; the fused streaming kernel
+    has its own ``block_n_fused`` because its constraints differ — the exact
+    path wants >= 2 grid steps (each step's matmul stays at or below the
+    ideal-conv flop count), while the fused kernel has no such pressure and
+    on the interpret-mode target a single step minimizes the dominant
+    grid-loop overhead (on a real TPU the VMEM budget caps it instead —
+    that is what the measured search is for).
+    """
+    block_n: int          # kernel-A patch-row block target (implicit im2col)
+    block_n_elem: int     # kernel-B elementwise row-block cap
+    block_n_fused: int = 0  # fused-kernel patch-row block (0 = whole N)
+    fused: bool = True    # stream with the single fused kernel
+
+    def to_json(self) -> Dict:
+        return {"block_n": self.block_n, "block_n_elem": self.block_n_elem,
+                "block_n_fused": self.block_n_fused, "fused": self.fused}
+
+    @staticmethod
+    def from_json(d: Dict) -> "TileChoice":
+        return TileChoice(block_n=int(d["block_n"]),
+                          block_n_elem=int(d["block_n_elem"]),
+                          block_n_fused=int(d.get("block_n_fused", 0)),
+                          fused=bool(d["fused"]))
+
+
+_TABLE: Dict[TuneKey, TileChoice] = {}
+
+
+def shape_key(n: int, k_eff: int, c_out: int) -> TuneKey:
+    """Table key: (patch rows N, contraction K = k*k*C_in, C_out)."""
+    return (int(n), int(k_eff), int(c_out))
+
+
+def default_choice(n: int, k_eff: int, c_out: int) -> TileChoice:
+    """Deterministic heuristic used when a shape has never been tuned.
+
+    ``block_n = n // 2`` keeps the exact path's kernel A at >= 2 grid steps
+    (per-step matmul flops <= the ideal-conv census) while minimizing the
+    interpret-mode grid overhead; the fused kernel defaults to one step.
+    """
+    block_n = max(min(n // 2, 4096), 1)
+    return TileChoice(block_n=block_n,
+                      block_n_elem=max(min(n, 16384), 1),
+                      block_n_fused=n,
+                      fused=True)
+
+
+def lookup(n: int, k_eff: int, c_out: int) -> Optional[TileChoice]:
+    return _TABLE.get(shape_key(n, k_eff, c_out))
+
+
+def put(n: int, k_eff: int, c_out: int, choice: TileChoice) -> None:
+    _TABLE[shape_key(n, k_eff, c_out)] = choice
+
+
+def clear() -> None:
+    """Drop every in-process entry (tests)."""
+    _TABLE.clear()
+
+
+def get(n: int, k_eff: int, c_out: int) -> TileChoice:
+    """The choice for a shape: tuned/loaded entry or the recorded default.
+
+    First call on an untuned shape records the heuristic default, so every
+    later call — and every jit trace — sees the identical choice.
+    """
+    key = shape_key(n, k_eff, c_out)
+    if key not in _TABLE:
+        _TABLE[key] = default_choice(n, k_eff, c_out)
+    return _TABLE[key]
+
+
+def resolve(n: int, k_eff: int, c_out: int,
+            block_n: Optional[int] = None,
+            block_n_elem: Optional[int] = None) -> Tuple[int, int]:
+    """Concrete (block_n, block_n_elem) for a call: explicit values win,
+    otherwise the table (tuned, loaded, or recorded default)."""
+    if block_n is not None and block_n_elem is not None:
+        return block_n, block_n_elem
+    choice = get(n, k_eff, c_out)
+    return (block_n if block_n is not None else choice.block_n,
+            block_n_elem if block_n_elem is not None else choice.block_n_elem)
+
+
+def resolve_fused(n: int, k_eff: int, c_out: int,
+                  block_n: Optional[int] = None) -> int:
+    """Concrete fused-kernel patch-row block (0 in the table = whole N)."""
+    if block_n is not None:
+        return block_n
+    choice = get(n, k_eff, c_out)
+    return choice.block_n_fused or n
+
+
+def save_table(path: str) -> None:
+    """Persist the in-process table as JSON ({"n,k,c": {...}})."""
+    with open(path, "w") as f:
+        json.dump({",".join(map(str, k)): v.to_json()
+                   for k, v in sorted(_TABLE.items())}, f, indent=2)
+
+
+def load_table(path: str) -> int:
+    """Merge a persisted table into the process; returns entries loaded."""
+    with open(path) as f:
+        raw = json.load(f)
+    for k, v in raw.items():
+        key = tuple(int(x) for x in k.split(","))
+        _TABLE[key] = TileChoice.from_json(v)  # type: ignore[index]
+    return len(raw)
+
+
+# ---------------------------------------------------------------------------
+# the search
+# ---------------------------------------------------------------------------
+
+def candidate_choices(n: int) -> Iterable[TileChoice]:
+    """The deterministic two-kernel candidate grid for a shape.
+
+    Every exact-path candidate is capped at ``n // 2`` — kernel A must keep
+    >= 2 grid steps so its per-step matmul census stays within the
+    1.2x-of-ideal budget that ``frontend_bench.py --quick`` gates; the
+    tuner must be unable to trade that invariant away for wall clock.
+    """
+    cap = max(n // 2, 1)
+    blocks = sorted({max(min(bn, cap), 1)
+                     for bn in (256, 512, 1024, 2048, cap)})
+    elems = sorted({max(min(be, n), 1) for be in (1024, 4096, 16384)})
+    return tuple(TileChoice(bn, be) for bn in blocks for be in elems)
+
+
+def fused_candidates(n: int) -> Iterable[int]:
+    """The deterministic fused-kernel block candidates (incl. whole-N)."""
+    return sorted({max(min(bn, n), 1) for bn in (512, 2048, max(n // 2, 1),
+                                                 n)})
+
+
+def _best_of(fn: Callable[[], None], repeats: int) -> float:
+    fn()            # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune_frontend(images, w, v_th, key, *, kernel: int = 3,
+                      stride: int = 2, chan=None,
+                      pixel_params=None, mtj_params=None,
+                      interpret: bool = True, repeats: int = 3,
+                      store: bool = True):
+    """Measure the candidate grid for this call shape; return
+    ``(TileChoice, report)`` and (by default) record the winner.
+
+    ``report`` maps ``"block_n/block_n_elem"`` to the measured two-kernel
+    and fused wall times (ms) — ``benchmarks/frontend_bench.py`` persists it
+    so the chosen tiles are auditable. The fused flag is set if the fused
+    streaming step at the winning tiles beats the two-kernel step.
+    """
+    import jax
+
+    from repro.core import mtj as mtj_model
+    from repro.core import pixel as pixel_model
+    from repro.kernels import blocking, ops
+    pixel_params = pixel_params or pixel_model.DEFAULT_PIXEL
+    mtj_params = mtj_params or mtj_model.DEFAULT_MTJ
+    b, h, wd, cin = images.shape
+    ho, wo = blocking.conv_out_hw(h, stride), blocking.conv_out_hw(wd, stride)
+    n = b * ho * wo
+    k_eff = kernel * kernel * cin
+    c_out = w.shape[-1]
+    theta0 = v_th.reshape(1, 1).astype("float32")
+    report: Dict[str, Dict[str, float]] = {"two_kernel": {}, "fused": {}}
+    base = dict(kernel=kernel, stride=stride, chan=chan,
+                pixel_params=pixel_params, mtj_params=mtj_params,
+                interpret=interpret)
+    best_two: Tuple[float, Optional[TileChoice]] = (float("inf"), None)
+    for cand in candidate_choices(n):
+        kw = dict(base, block_n=cand.block_n, block_n_elem=cand.block_n_elem)
+
+        def two_kernel():
+            jax.block_until_ready(ops.p2m_frontend(images, w, v_th, key,
+                                                   **kw)[0])
+
+        ms = _best_of(two_kernel, repeats) * 1e3
+        report["two_kernel"][f"{cand.block_n}/{cand.block_n_elem}"] = ms
+        if ms < best_two[0]:
+            best_two = (ms, cand)
+    best_fused: Tuple[float, int] = (float("inf"), n)
+    for bn in fused_candidates(n):
+        kw = dict(base, block_n=bn)
+
+        def fused():
+            jax.block_until_ready(
+                ops.p2m_frontend_fused(images, w, v_th, theta0, key,
+                                       **kw)[0])
+
+        ms = _best_of(fused, repeats) * 1e3
+        report["fused"][str(bn)] = ms
+        if ms < best_fused[0]:
+            best_fused = (ms, bn)
+    assert best_two[1] is not None
+    choice = dataclasses.replace(best_two[1],
+                                 block_n_fused=best_fused[1],
+                                 fused=best_fused[0] < best_two[0])
+    if store:
+        put(n, k_eff, c_out, choice)
+    return choice, report

@@ -1,0 +1,107 @@
+"""Shared padding / blocking / conv-geometry helpers for the Pallas frontend.
+
+One home for the little integer lemmas that used to be split across
+``ops.py`` (``_pad_to``, ``_elem_block``) and are now also needed by the tile
+autotuner (``kernels/autotune.py``): SAME-convolution geometry, lane/row
+padding, and divisor-constrained block sizing. Everything here is pure
+Python/jnp on static shapes — safe to call at trace time (the choices are
+deterministic functions of the shape, so a jitted caller never sees two
+different blockings for one shape).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    """Zero-pad ``axis`` up to the next multiple of ``mult`` (no-op if aligned)."""
+    rem = x.shape[axis] % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, mult - rem)
+    return jnp.pad(x, pad)
+
+
+def conv_out_hw(h: int, stride: int) -> int:
+    """SAME-padding output extent: ceil(h / stride)."""
+    return -(-h // stride)
+
+
+def same_pads(h: int, w: int, kernel: int, stride: int
+              ) -> Tuple[Tuple[int, int], Tuple[int, int]]:
+    """SAME-convolution padding amounts ((lo_h, hi_h), (lo_w, hi_w)).
+
+    Matches ``jax.lax.conv_general_dilated(..., "SAME")`` exactly: output
+    extent ceil(h/stride) with the extra element on the HIGH side for
+    asymmetric strided cases. Odd kernels only (an even kernel has no
+    SAME-consistent symmetric interpretation — callers reject it up front).
+    """
+    ho, wo = conv_out_hw(h, stride), conv_out_hw(w, stride)
+    pad_h = max((ho - 1) * stride + kernel - h, 0)
+    pad_w = max((wo - 1) * stride + kernel - w, 0)
+    return ((pad_h // 2, pad_h - pad_h // 2),
+            (pad_w // 2, pad_w - pad_w // 2))
+
+
+def pad_same(images: jax.Array, kernel: int, stride: int) -> jax.Array:
+    """NHWC SAME zero-padding (the only image copy the implicit-im2col
+    pipeline makes — the patch matrix itself never exists in HBM)."""
+    _, h, w, _ = images.shape
+    (plo_h, phi_h), (plo_w, phi_w) = same_pads(h, w, kernel, stride)
+    return jnp.pad(images, ((0, 0), (plo_h, phi_h), (plo_w, phi_w), (0, 0)))
+
+
+def largest_divisor_at_most(n: int, cap: int) -> int:
+    """The largest divisor of ``n`` that is <= ``cap`` (>= 1)."""
+    cap = max(min(cap, n), 1)
+    for d in range(cap, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def row_block(ho: int, wo: int, block_n: int) -> int:
+    """Output-row group for the implicit-im2col kernel A grid.
+
+    Kernel A processes ``block_oh`` whole output rows (= ``block_oh * wo``
+    patch rows) per grid step; ``block_oh`` must divide ``ho`` so the grid
+    tiles exactly. Returns the largest divisor of ``ho`` whose patch-row
+    count stays within the requested ``block_n`` target (>= 1 row).
+    """
+    return largest_divisor_at_most(ho, max(block_n // max(wo, 1), 1))
+
+
+def a_block_geometry(b: int, ho: int, wo: int, block_n: int
+                     ) -> Tuple[int, int]:
+    """(frames per block ``bb``, output rows per block ``block_oh``) for the
+    implicit-im2col kernel A.
+
+    Blocks must hold whole output rows (``block_oh`` divides ``ho``) so each
+    grid step's patch rows are contiguous in ``ops.im2col`` order; multiple
+    frames per step (``bb > 1``, a divisor of ``b``) are only allowed when a
+    step covers the full frame (``block_oh == ho``) for the same reason.
+    The resulting patch-row block is ``bb * block_oh * wo <= max(block_n,
+    wo)`` (at least one output row).
+    """
+    block_oh = row_block(ho, wo, block_n)
+    bb = 1
+    if block_oh == ho:
+        bb = largest_divisor_at_most(b, max(block_n // (ho * wo), 1))
+    return bb, block_oh
+
+
+def elem_block(n: int, block_n: int, block_n_elem: int) -> int:
+    """Largest kernel-B row block <= block_n_elem that tiles n exactly.
+
+    Kernel B is elementwise (no MXU tile), so it runs profitably with much
+    larger blocks than the matmul kernel; n is already a multiple of block_n.
+    """
+    blk = min(block_n_elem, n)
+    blk -= blk % block_n
+    while blk > block_n and n % blk:
+        blk -= block_n
+    return max(blk, block_n)

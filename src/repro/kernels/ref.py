@@ -28,13 +28,31 @@ def p2m_conv_ref(patches: jax.Array, w: jax.Array, theta: jax.Array,
 
     patches: (N, K) im2col rows; w: (K, C) signed quantized weights;
     theta: () algorithmic threshold (Hoyer extremum x v_th, in conv units);
-    bits: (N, C) uint32 random words (one Bernoulli draw; the n-MTJ majority
-    is folded into the probability — distributionally identical).
-    Returns float {0,1} activations (N, C).
+    bits: (N, C) ``mtj.DRAW_BITS_DTYPE`` random words (one Bernoulli draw;
+    the n-MTJ majority is folded into the probability — distributionally
+    identical). Returns float {0,1} activations (N, C).
 
     Calls the *same* ``core/pixel.py`` / ``core/mtj.py`` functions the Pallas
-    kernel traces, so kernel-vs-ref parity is bit-exact (DESIGN.md §5).
+    kernel traces, so kernel-vs-ref parity is bit-exact at the operand
+    level. NOTE (DESIGN.md §9): the implicit-im2col kernel's matmul is not
+    *operand-identical* to this oracle's (in-kernel gather vs materialized
+    patches), so u may differ by an ulp — an end-to-end activation
+    comparison should therefore allow mismatches that sit within one
+    uint16 word of the draw threshold (``p2m_conv_ref_q`` exposes q for
+    exactly that check; given the same q the draw itself is bit-exact).
     """
+    return mtj_model.bernoulli_from_bits(
+        bits, p2m_conv_ref_q(patches, w, theta, pixel_params=pixel_params,
+                             mtj_params=mtj_params))
+
+
+def p2m_conv_ref_q(patches: jax.Array, w: jax.Array, theta: jax.Array, *,
+                   pixel_params: pixel_model.PixelCircuitParams =
+                   pixel_model.DEFAULT_PIXEL,
+                   mtj_params: mtj_model.MTJParams = mtj_model.DEFAULT_MTJ
+                   ) -> jax.Array:
+    """The fused oracle's folded-majority activation probability (N, C) —
+    everything in ``p2m_conv_ref`` up to (but not including) the draw."""
     mac_pos = jnp.dot(patches, jnp.maximum(w, 0.0),
                       preferred_element_type=jnp.float32)
     mac_neg = jnp.dot(patches, jnp.maximum(-w, 0.0),
@@ -44,10 +62,8 @@ def p2m_conv_ref(patches: jax.Array, w: jax.Array, theta: jax.Array,
     v = pixel_model.conv_voltage(u, theta, pixel_params)
     p_sw = mtj_model.switching_probability(
         v, mtj_params.write_pulse_ps, mtj_params)
-    q = mtj_model.majority_prob_poly(
+    return mtj_model.majority_prob_poly(
         p_sw, mtj_params.n_redundant, mtj_params.majority)
-    draw = (bits.astype(jnp.float32) * (1.0 / 2 ** 32)) < q
-    return draw.astype(jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -124,7 +140,7 @@ def p2m_phase_b_ref(u: jax.Array, theta: jax.Array, bits: jax.Array, *,
                         chip_mod.CHAN_LOGIT_GAIN + 1, :])
     q = mtj_model.majority_prob_poly(
         p_sw, mtj_params.n_redundant, mtj_params.majority)
-    draw = (bits.astype(jnp.float32) * (1.0 / 2 ** 32)) < q
+    draw = mtj_model.bernoulli_from_bits(bits, q)
 
     n, c = u.shape
     valid = ((jnp.arange(n)[:, None] < n_valid)

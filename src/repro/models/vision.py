@@ -27,8 +27,9 @@ class VisionConfig:
     p2m: p2m.P2MConfig = p2m.P2MConfig()
     frontend_backend: str = "analog"     # default SensorFrontend backend
     frontend_interpret: bool = True      # False: compile the Pallas kernel (TPU)
-    frontend_block_n: int = 512          # kernel-A patch-row (MXU) block size
-    frontend_block_n_elem: int = 4096    # kernel-B elementwise row-block cap
+    # None = per-shape autotuner table (kernels/autotune.py); ints pin tiles
+    frontend_block_n: Optional[int] = None      # kernel-A patch-row block
+    frontend_block_n_elem: Optional[int] = None  # kernel-B row-block cap
     weight_bits: int = 4
     remove_first_maxpool: bool = False   # paper's Model* variants
     hoyer_coeff: float = 1e-8

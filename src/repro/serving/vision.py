@@ -81,7 +81,11 @@ class VisionEngine:
                  microbatch: Optional[int] = None,
                  calibration=None,
                  drift=None, schedule=None,
-                 calibration_frames: Optional[jax.Array] = None):
+                 calibration_frames: Optional[jax.Array] = None,
+                 fused_stream: Optional[bool] = None,
+                 fused_theta_tol: float = 0.02,
+                 fused_theta_ema: float = 0.9,
+                 tile_table: Optional[str] = None):
         self.cfg = cfg
         self.backend = backend or cfg.frontend_backend
         self.mesh = mesh
@@ -89,6 +93,24 @@ class VisionEngine:
         self.microbatch = microbatch
         self._key = jax.random.PRNGKey(seed)
         self._frame_count = 0
+        if fused_stream and self.backend != "pallas":
+            raise ValueError("fused_stream=True requires the 'pallas' "
+                             f"backend (got {self.backend!r})")
+        if tile_table is not None:
+            # bring a persisted autotuner search (frontend_bench writes one
+            # next to BENCH_frontend.json) into this process: tile/fused
+            # resolution then uses the MEASURED per-shape choices instead
+            # of the heuristic defaults
+            from repro.kernels import autotune
+            autotune.load_table(tile_table)
+        # fused streaming (DESIGN.md §9): None = auto (pallas streams consult
+        # the kernels/autotune table for this shape), True/False pins it
+        self._fused_stream = fused_stream
+        self._fused_theta_tol = fused_theta_tol
+        self._fused_theta_ema = fused_theta_ema
+        self._theta_carry: Optional[float] = None
+        self.fused_step_count = 0
+        self.fused_fallback_count = 0
         if calibration is not None:
             # this engine serves ONE physical chip (cfg.variation/chip_id);
             # program its tester-solved per-channel trim into the frontend
@@ -104,6 +126,8 @@ class VisionEngine:
         self.params = params
         self._step = jax.jit(functools.partial(self._forward, cfg=cfg,
                                                backend=self.backend))
+        self._fused_step = jax.jit(functools.partial(
+            self._forward_fused, cfg=cfg, backend=self.backend))
         # modeled sensor-side frame budget at this engine's geometry
         # (core/energy §3.4) — constant telemetry, computed once
         lat = energy.frame_latency_us(self._frame_spec())
@@ -192,6 +216,42 @@ class VisionEngine:
         probs = jax.nn.softmax(logits, axis=-1)
         return {"labels": jnp.argmax(logits, -1), "probs": probs, **aux}
 
+    @staticmethod
+    def _forward_fused(params, frames, key, theta_carry, *, cfg, backend):
+        """The fused streaming step: identical to ``_forward`` except the
+        carried Hoyer threshold rides into the frontend params, which routes
+        the pallas backend onto the single-kernel ``p2m_frontend_fused``
+        path (DESIGN.md §9). ``theta_carry`` is an ARRAY operand — a new EMA
+        value every microbatch against one compilation."""
+        params = {**params, "p2m": {**params["p2m"],
+                                    "theta_carry": theta_carry}}
+        logits, _, aux = vision.forward(params, frames, cfg, key=key,
+                                        backend=backend)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return {"labels": jnp.argmax(logits, -1), "probs": probs, **aux}
+
+    def _stream_fused_enabled(self, n_frames: int, h: int, w: int) -> bool:
+        """Whether a stream step of ``n_frames`` (h, w) frames runs the
+        fused single-kernel path.
+
+        Explicit ``fused_stream=`` wins; otherwise pallas streams consult
+        the autotuner's per-shape choice (``TileChoice.fused`` — measured
+        when the deployment ran the search, heuristic default otherwise).
+        ``n_frames`` must be the EXECUTED step's frame count — the
+        microbatch, not the incoming batch — so the lookup hits the same
+        (N, K, C) key the tuner stored for the step that actually runs.
+        """
+        if self.backend != "pallas":
+            return False
+        if self._fused_stream is not None:
+            return self._fused_stream
+        from repro.kernels import autotune, blocking
+        pcfg = self.cfg.p2m
+        n = (n_frames * blocking.conv_out_hw(h, pcfg.stride)
+             * blocking.conv_out_hw(w, pcfg.stride))
+        k_eff = pcfg.kernel_size ** 2 * pcfg.in_channels
+        return autotune.get(n, k_eff, pcfg.out_channels).fused
+
     def _shard_frames(self, frames: jax.Array) -> jax.Array:
         """Lay the frame batch out over the mesh's batch axes (no-op when
         the engine is unsharded or the batch does not divide the axes)."""
@@ -214,7 +274,15 @@ class VisionEngine:
         return self._classify(frames, key, advance=key is None)
 
     def _classify(self, frames: jax.Array, key: Optional[jax.Array],
-                  advance: bool) -> Dict:
+                  advance: bool, fused: Optional[bool] = None) -> Dict:
+        """``fused`` is tri-state: None = not a pallas-stream call (classify
+        and non-pallas streams — no streaming telemetry keys, bit-identical
+        to a plain engine); False = a pallas stream step the tuner/caller
+        kept on the exact path; True = attempt the fused carried-theta step.
+        Every pallas-stream step (either boolean) emits the SAME aux keys,
+        so ``_merge_outputs`` never sees a mixed-key microbatch set even
+        when the fused decision differs per microbatch shape (e.g. a
+        non-divisible tail)."""
         if key is None:
             key = jax.random.fold_in(self._key, self._frame_count)
             self._frame_count += 1
@@ -225,11 +293,22 @@ class VisionEngine:
         # overlap is nil; a latency-critical accelerator deployment would
         # move the sync off the serving path (async telemetry) instead.
         t0 = time.perf_counter()
-        out = jax.block_until_ready(
-            self._step(params, self._shard_frames(frames), key))
+        if fused:
+            out, drift, ran_fused = self._fused_classify(params, frames, key)
+        else:
+            out = jax.block_until_ready(
+                self._step(params, self._shard_frames(frames), key))
+            drift, ran_fused = 0.0, False
         wall = time.perf_counter() - t0
         n = frames.shape[0]
         out = dict(out)
+        if fused is not None:
+            # streaming telemetry: fraction of fused steps and the audited
+            # relative theta drift (0.0 on the exact path / first microbatch)
+            out["stream_fused"] = 1.0 if ran_fused else 0.0
+            out["stream_theta_drift"] = drift
+            if "theta_used" not in out:     # exact step: it used its own
+                out["theta_used"] = out["theta"]
         out["wall_ms"] = wall * 1e3
         out["throughput_fps"] = n / wall
         out["sensor_latency_us"] = self._sensor_latency_us
@@ -237,6 +316,50 @@ class VisionEngine:
         if self.lifetime is not None and advance:
             out.update(self._advance_lifetime(out, n))
         return out
+
+    def _fused_classify(self, params, frames: jax.Array, key: jax.Array):
+        """One streaming microbatch on the fused path, with the theta-EMA
+        drift guard (DESIGN.md §9). Returns ``(out, rel_drift, ran_fused)``.
+
+        The first microbatch (no carried threshold yet) runs the exact
+        two-kernel step and seeds the carry — bit-identical to a
+        non-streaming call. Later microbatches run the single fused kernel
+        at the carried EMA threshold; the kernel also emits the FRESH Hoyer
+        threshold, and when it has moved more than ``fused_theta_tol``
+        (relative) away from the carry, the microbatch is RE-RUN on the
+        exact path (same key — the rng sequence is identical either way,
+        so guard firings are key-free and deterministic in the frames) and
+        the carry is re-seeded. Otherwise the carry advances as
+        ``ema * carry + (1 - ema) * fresh``.
+        """
+        frames = self._shard_frames(frames)
+        if self._theta_carry is None:
+            out = dict(jax.block_until_ready(
+                self._step(params, frames, key)))
+            # the exact path thresholds at its own fresh theta; mirroring it
+            # under the fused path's aux key keeps every microbatch output
+            # of a stream structurally identical for _merge_outputs
+            out["theta_used"] = out["theta"]
+            self._theta_carry = float(out["theta"])
+            return out, 0.0, False
+        carry = self._theta_carry
+        out = jax.block_until_ready(self._fused_step(
+            params, frames, key, jnp.asarray(carry, jnp.float32)))
+        self.fused_step_count += 1
+        fresh = float(out["theta"])
+        drift = abs(fresh - carry) / max(abs(carry), 1e-9)
+        if drift > self._fused_theta_tol:
+            # the carried threshold went stale (scene change): serve this
+            # microbatch from the exact pipeline and restart the EMA
+            out = dict(jax.block_until_ready(
+                self._step(params, frames, key)))
+            out["theta_used"] = out["theta"]
+            self._theta_carry = float(out["theta"])
+            self.fused_fallback_count += 1
+            return out, drift, False
+        self._theta_carry = (self._fused_theta_ema * carry
+                             + (1.0 - self._fused_theta_ema) * fresh)
+        return out, drift, True
 
     def stream(self, frame_batches: Iterable[jax.Array]) -> Iterator[Dict]:
         """Classify a stream of frame batches; per-batch (and, with
@@ -247,20 +370,45 @@ class VisionEngine:
         the frame-clock advances per microbatch, so the chip the Nth
         microbatch sees is older than the first — and the scheduler may
         refresh the trim mid-stream (a deterministic, key-free event: the
-        rng sequence of the draws is identical with or without it)."""
+        rng sequence of the draws is identical with or without it).
+
+        Pallas streams run the FUSED single-kernel frontend in steady state
+        (``fused_stream=``: None defers to the autotuner's per-shape
+        choice): the first microbatch takes the exact two-kernel path
+        (bit-identical to ``classify``) and seeds a carried Hoyer-theta
+        EMA; later microbatches draw at the carried threshold and fall
+        back to the exact path whenever the fresh threshold drifts beyond
+        ``fused_theta_tol`` (a key-free, frames-deterministic guard).
+        ``stream_fused`` / ``stream_theta_drift`` telemetry rides in every
+        output (DESIGN.md §9)."""
+        # a new stream is a new scene: drop any carried threshold so the
+        # first microbatch of EVERY stream is the exact step that re-seeds
+        # it (a stale carry from a previous stream could sit inside the
+        # tolerance yet describe a different scene)
+        self._theta_carry = None
         for frames in frame_batches:
             mb = self.microbatch
-            if not mb or frames.shape[0] <= mb:
-                yield self.classify(frames)
+            b, h, w = frames.shape[0], frames.shape[1], frames.shape[2]
+
+            def fused_arg(n_frames: int) -> Optional[bool]:
+                # tri-state: None for non-pallas backends (stream outputs
+                # stay exactly as before the fused mode existed)
+                if self.backend != "pallas":
+                    return None
+                return self._stream_fused_enabled(n_frames, h, w)
+
+            if not mb or b <= mb:
+                yield self._classify(frames, None, advance=True,
+                                     fused=fused_arg(b))
                 continue
             base = jax.random.fold_in(self._key, self._frame_count)
             self._frame_count += 1
-            starts = list(range(0, frames.shape[0], mb))
-            outs = [self._classify(frames[i:i + mb],
+            starts = list(range(0, b, mb))
+            sizes = [min(mb, b - i) for i in starts]
+            outs = [self._classify(frames[i:i + sz],
                                    key=jax.random.fold_in(base, j),
-                                   advance=True)
-                    for j, i in enumerate(starts)]
-            sizes = [min(mb, frames.shape[0] - i) for i in starts]
+                                   advance=True, fused=fused_arg(sz))
+                    for j, (i, sz) in enumerate(zip(starts, sizes))]
             yield _merge_outputs(outs, sizes)
 
 

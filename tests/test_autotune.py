@@ -1,0 +1,145 @@
+"""Tile-autotuner tests (kernels/autotune.py): deterministic resolution,
+cache-hit stability, JSON persistence, the measured search, and the
+no-jit-cache-growth property of autotuned frontend calls."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import p2m
+from repro.kernels import autotune, ops
+
+CFG = p2m.P2MConfig()
+
+
+@pytest.fixture(autouse=True)
+def _fresh_table():
+    """Each test starts from an empty in-process table and leaves none of
+    its entries behind (the table is process-global by design)."""
+    saved = dict(autotune._TABLE)
+    autotune.clear()
+    yield
+    autotune.clear()
+    autotune._TABLE.update(saved)
+
+
+class TestDeterministicResolution:
+    def test_get_records_default_and_is_stable(self):
+        a = autotune.get(4096, 27, 32)
+        b = autotune.get(4096, 27, 32)
+        assert a == b == autotune.default_choice(4096, 27, 32)
+        assert autotune.lookup(4096, 27, 32) == a
+
+    def test_resolve_explicit_wins(self):
+        autotune.put(512, 27, 32, autotune.TileChoice(64, 128))
+        assert autotune.resolve(512, 27, 32, 256, 1024) == (256, 1024)
+        assert autotune.resolve(512, 27, 32, None, 1024) == (64, 1024)
+        assert autotune.resolve(512, 27, 32) == (64, 128)
+
+    def test_resolve_fused_whole_n_default(self):
+        assert autotune.resolve_fused(512, 27, 32) == 512
+        autotune.put(512, 27, 32,
+                     autotune.TileChoice(64, 128, block_n_fused=256))
+        assert autotune.resolve_fused(512, 27, 32) == 256
+        assert autotune.resolve_fused(512, 27, 32, 128) == 128
+
+    def test_tuned_entry_survives_repeated_resolution(self):
+        tuned = autotune.TileChoice(block_n=128, block_n_elem=512,
+                                    block_n_fused=512, fused=False)
+        autotune.put(512, 27, 32, tuned)
+        for _ in range(3):
+            assert autotune.get(512, 27, 32) == tuned
+
+    def test_default_choice_keeps_exact_path_at_two_plus_steps(self):
+        """The heuristic must never hand the exact path a whole-N block —
+        that would double the per-step matmul census past the 1.2x-of-ideal
+        budget (frontend_bench --quick gates it)."""
+        for n in (128, 512, 4096, 65536):
+            c = autotune.default_choice(n, 27, 32)
+            assert c.block_n <= max(n // 2, 1)
+            assert c.block_n_fused == n
+
+
+class TestPersistence:
+    def test_json_roundtrip(self, tmp_path):
+        autotune.put(4096, 27, 32, autotune.TileChoice(2048, 4096, 4096,
+                                                       True))
+        autotune.put(512, 27, 32, autotune.TileChoice(128, 512, 512, False))
+        path = str(tmp_path / "tiles.json")
+        autotune.save_table(path)
+        autotune.clear()
+        assert autotune.lookup(4096, 27, 32) is None
+        assert autotune.load_table(path) == 2
+        assert autotune.lookup(4096, 27, 32) == autotune.TileChoice(
+            2048, 4096, 4096, True)
+        assert autotune.lookup(512, 27, 32) == autotune.TileChoice(
+            128, 512, 512, False)
+
+
+class TestSearch:
+    def test_autotune_frontend_stores_a_candidate(self):
+        params = p2m.init_params(jax.random.PRNGKey(0), CFG)
+        frames = jax.random.uniform(jax.random.PRNGKey(1), (2, 16, 16, 3))
+        wq = p2m.quantize_weights(params["w"], CFG.weight_bits)
+        choice, report = autotune.autotune_frontend(
+            frames, wq, params["v_th"], jax.random.PRNGKey(2), repeats=1)
+        n = 2 * 8 * 8
+        assert (choice.block_n, choice.block_n_elem) in {
+            (c.block_n, c.block_n_elem) for c in autotune.candidate_choices(n)}
+        assert choice.block_n_fused in set(autotune.fused_candidates(n))
+        assert autotune.lookup(n, 27, CFG.out_channels) == choice
+        assert report["two_kernel"] and report["fused"]
+        assert all(ms > 0 for ms in report["two_kernel"].values())
+
+    def test_search_result_changes_resolution_not_results(self):
+        """Tuning moves tiles, never numerics: the frontend output for a
+        fixed key is identical before and after the search."""
+        params = p2m.init_params(jax.random.PRNGKey(0), CFG)
+        frames = jax.random.uniform(jax.random.PRNGKey(1), (2, 16, 16, 3))
+        wq = p2m.quantize_weights(params["w"], CFG.weight_bits)
+        key = jax.random.PRNGKey(5)
+        before, aux_b = ops.p2m_frontend(frames, wq, params["v_th"], key)
+        autotune.autotune_frontend(frames, wq, params["v_th"],
+                                   jax.random.PRNGKey(2), repeats=1)
+        after, aux_a = ops.p2m_frontend(frames, wq, params["v_th"], key)
+        np.testing.assert_array_equal(np.asarray(before), np.asarray(after))
+        np.testing.assert_allclose(float(aux_b["theta"]),
+                                   float(aux_a["theta"]), rtol=1e-6)
+
+
+class TestJitCacheStability:
+    def test_no_jit_cache_growth_on_repeated_autotuned_calls(self):
+        """Auto-resolved tiles are a pure function of the shape, so after
+        the first call at a shape, further calls (fresh keys, fresh frames,
+        repeated table resolution) never compile the inner frontend again
+        — and a second shape adds at most one new entry."""
+        params = p2m.init_params(jax.random.PRNGKey(0), CFG)
+        wq = p2m.quantize_weights(params["w"], CFG.weight_bits)
+        frames = jax.random.uniform(jax.random.PRNGKey(1), (2, 24, 24, 3))
+        ops.p2m_frontend(frames, wq, params["v_th"], jax.random.PRNGKey(0))
+        size1 = ops._p2m_frontend._cache_size()
+        for i in range(1, 4):
+            ops.p2m_frontend(
+                jax.random.uniform(jax.random.PRNGKey(i), (2, 24, 24, 3)),
+                wq, params["v_th"], jax.random.PRNGKey(i))
+        assert ops._p2m_frontend._cache_size() == size1
+        frames2 = jax.random.uniform(jax.random.PRNGKey(9), (4, 24, 24, 3))
+        ops.p2m_frontend(frames2, wq, params["v_th"], jax.random.PRNGKey(0))
+        size2 = ops._p2m_frontend._cache_size()
+        assert size2 <= size1 + 1
+        for i in range(1, 3):
+            ops.p2m_frontend(frames2, wq, params["v_th"],
+                             jax.random.PRNGKey(i))
+        assert ops._p2m_frontend._cache_size() == size2
+
+    def test_fused_wrapper_cache_stable_across_theta_values(self):
+        params = p2m.init_params(jax.random.PRNGKey(0), CFG)
+        wq = p2m.quantize_weights(params["w"], CFG.weight_bits)
+        frames = jax.random.uniform(jax.random.PRNGKey(1), (2, 24, 24, 3))
+        ops.p2m_frontend_fused(frames, wq, params["v_th"], jnp.asarray(0.7),
+                               jax.random.PRNGKey(0))
+        size1 = ops._p2m_frontend_fused._cache_size()
+        for i, th in enumerate((0.3, 0.5, 0.9)):
+            ops.p2m_frontend_fused(frames, wq, params["v_th"],
+                                   jnp.asarray(th), jax.random.PRNGKey(i))
+        assert ops._p2m_frontend_fused._cache_size() == size1

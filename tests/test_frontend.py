@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from draw_asserts import assert_draws_match_modulo_word_boundary
+
 from repro import frontend
 from repro.core import hoyer, mtj, p2m
 from repro.kernels import ops, ref
@@ -78,14 +80,12 @@ class TestCrossBackendParity:
                                    rtol=1e-5)
         wq = p2m.quantize_weights(params["w"], CFG.weight_bits)
         patches = ops.im2col(frame, CFG.kernel_size, CFG.stride)
-        bits = jax.random.bits(key, (patches.shape[0], CFG.out_channels),
-                               jnp.uint32)
-        expected = ref.p2m_conv_ref(
-            patches, wq.reshape(-1, CFG.out_channels), aux["theta"], bits,
+        bits = ops.draw_bits(key, patches.shape[0], CFG.out_channels)
+        q = ref.p2m_conv_ref_q(
+            patches, wq.reshape(-1, CFG.out_channels), aux["theta"],
             pixel_params=CFG.pixel, mtj_params=CFG.mtj)
-        np.testing.assert_array_equal(
-            np.asarray(acts.reshape(-1, CFG.out_channels)),
-            np.asarray(expected))
+        assert_draws_match_modulo_word_boundary(
+            acts.reshape(-1, CFG.out_channels), q, bits)
 
     def test_pallas_parity_with_nondefault_device_params(self):
         """The threading is real: change pixel/MTJ params and parity holds."""
@@ -107,14 +107,12 @@ class TestCrossBackendParity:
                                    rtol=1e-5)
         wq = p2m.quantize_weights(params["w"], pcfg.weight_bits)
         patches = ops.im2col(frame, pcfg.kernel_size, pcfg.stride)
-        bits = jax.random.bits(key, (patches.shape[0], pcfg.out_channels),
-                               jnp.uint32)
-        expected = ref.p2m_conv_ref(
-            patches, wq.reshape(-1, pcfg.out_channels), aux["theta"], bits,
+        bits = ops.draw_bits(key, patches.shape[0], pcfg.out_channels)
+        q = ref.p2m_conv_ref_q(
+            patches, wq.reshape(-1, pcfg.out_channels), aux["theta"],
             pixel_params=pcfg.pixel, mtj_params=pcfg.mtj)
-        np.testing.assert_array_equal(
-            np.asarray(acts.reshape(-1, pcfg.out_channels)),
-            np.asarray(expected))
+        assert_draws_match_modulo_word_boundary(
+            acts.reshape(-1, pcfg.out_channels), q, bits)
 
     def test_analog_matches_pre_refactor_forward_train(self):
         """Acceptance: the analog backend reproduces the pre-refactor

@@ -91,7 +91,7 @@ class TestP2MConvKernel:
         # oracle on the same patches + same bits
         patches = ops.im2col(img, 3, 2)
         wm = w.reshape(-1, cout)
-        bits = jax.random.bits(key, (patches.shape[0], cout), jnp.uint32)
+        bits = ops.draw_bits(key, patches.shape[0], cout)
         r = ref.p2m_conv_ref(patches, wm, theta, bits)
         np.testing.assert_array_equal(
             np.asarray(out.reshape(-1, cout)), np.asarray(r))

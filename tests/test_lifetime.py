@@ -153,8 +153,8 @@ class TestDriftedKernelOperands:
                               1, 128)
         wm = ops._pad_to(ops._pad_to(
             wq.reshape(-1, CFG.out_channels), 0, 128), 1, 128)
-        bits = jax.random.bits(jax.random.PRNGKey(8),
-                               (patches.shape[0], 128), jnp.uint32)
+        bits = ops.draw_bits(jax.random.PRNGKey(8),
+                             patches.shape[0], 128)
         u, hp = pk.p2m_phase_a_pallas(patches, wm, jnp.ones((1, 1)),
                                       block_n=64)
         theta = pk.combine_hoyer_partials(hp, jnp.asarray(1.0))
