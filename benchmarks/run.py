@@ -10,6 +10,7 @@ import time
 
 
 def main() -> None:
+    from benchmarks import fleet_bench
     from benchmarks import lifetime_bench
     from benchmarks import paper_benchmarks as pb
     from benchmarks import variation_bench
@@ -24,6 +25,7 @@ def main() -> None:
         pb.bench_fig8_error_sensitivity,
         variation_bench.bench_rows,
         lifetime_bench.bench_rows,
+        fleet_bench.bench_rows,
     ]
     print("name,value,derived")
     failures = 0

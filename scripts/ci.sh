@@ -4,19 +4,26 @@
 # single-pass-vs-double-conv speedup is tracked on every run) + the
 # device-variation smoke sweep (small sigma, 2 chips, interpret mode;
 # writes BENCH_variation.json) + the sensor-lifetime smoke sweep (small
-# fleet / age grid; writes BENCH_lifetime.json) — both benches promote any
-# warning raised from their package (repro.variation / repro.lifetime) to
-# an error. Long fleet Monte-Carlo tests are marked `slow` and excluded
-# from the tier-1 run (use `-m slow` to run them).
-# The frontend perf-regression smoke runs FIRST and cheap: the --quick
+# fleet / age grid; writes BENCH_lifetime.json) + the fleet-serving smoke
+# (throughput vs fleet size, recal amortization, single-chip parity gate;
+# writes BENCH_fleet.json) — the benches promote any warning raised from
+# their package (repro.variation / repro.lifetime / repro.serving) to an
+# error. Long fleet Monte-Carlo tests are marked `slow` and excluded from
+# the tier-1 run (use `-m slow` to run them).
+# The perf-regression smokes run FIRST and cheap: the frontend --quick
 # census gate fails the build if the pallas dot/conv structure or matmul
-# flop budget drifts (wall clock stays informational — no flaky timing
-# gates on shared hosts).
+# flop budget drifts, and the fleet --quick gate fails it if the vmapped
+# fleet step stops batching the kernel (census growing with the chip
+# axis). Wall clock stays informational — no flaky timing gates on shared
+# hosts. The examples smoke keeps the README entry points importable and
+# runnable end to end.
 # Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/frontend_bench.py --quick
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/fleet_bench.py --quick
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/frontend_bench.py --smoke --out BENCH_frontend.json
@@ -26,3 +33,11 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/lifetime_bench.py --smoke --warnings-as-errors \
     --out BENCH_lifetime.json
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/fleet_bench.py --smoke --warnings-as-errors \
+    --out BENCH_fleet.json
+# examples smoke: the documented entry points must run end to end
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/p2m_frontend.py
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python examples/serve_lm.py --batch 2 --new-tokens 4

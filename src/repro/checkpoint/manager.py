@@ -41,6 +41,8 @@ def _flatten(tree, prefix="") -> Dict[str, Any]:
     if isinstance(tree, dict):
         for k, v in tree.items():
             out.update(_flatten(v, f"{prefix}{k}/"))
+        if len(tree) == 0:
+            out[prefix + "__empty__"] = np.zeros((0,))
     elif isinstance(tree, (list, tuple)):
         for i, v in enumerate(tree):
             out.update(_flatten(v, f"{prefix}__{i}/"))
@@ -58,8 +60,28 @@ def _unflatten_into(template, flat: Dict[str, Any], prefix=""):
     if isinstance(template, (list, tuple)):
         vals = [_unflatten_into(v, flat, f"{prefix}__{i}/")
                 for i, v in enumerate(template)]
+        # NamedTuples (ChipMaps / DriftMaps and friends) construct from
+        # positional fields, not from one iterable
+        if hasattr(type(template), "_fields"):
+            return type(template)(*vals)
         return type(template)(vals)
     return flat[prefix.rstrip("/")]
+
+
+def _template_dtype(leaf):
+    """The dtype a restored leaf must come back as (None = keep stored)."""
+    dt = getattr(leaf, "dtype", None)
+    if dt is not None:
+        return dt
+    # python scalars in a template (an int frame-clock, a float energy
+    # counter) restore as 0-d arrays of the matching numpy dtype
+    if isinstance(leaf, bool):
+        return np.dtype(bool)
+    if isinstance(leaf, int):
+        return np.dtype(np.int64)
+    if isinstance(leaf, float):
+        return np.dtype(np.float64)
+    return None
 
 
 class CheckpointManager:
@@ -126,6 +148,14 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def manifest(self, step: int) -> Dict:
+        """The saved manifest (step, extra, tree names) without restoring
+        arrays — a restorer reads this first when the template SHAPES
+        depend on saved metadata (e.g. a fleet registry's chip count)."""
+        path = os.path.join(self.dir, f"step_{step}", "manifest.json")
+        with open(path) as f:
+            return json.load(f)
+
     def restore(self, step: int, templates: Dict[str, Any],
                 shardings: Optional[Dict[str, Any]] = None):
         """templates: name -> pytree of arrays/ShapeDtypeStructs (structure +
@@ -141,14 +171,26 @@ class CheckpointManager:
             tree = _unflatten_into(template, flat)
             tmpl_flat = jax.tree.leaves(template)
             tree_flat = jax.tree.leaves(tree)
-            casted = [np.asarray(v).astype(t.dtype)
-                      for v, t in zip(tree_flat, tmpl_flat)]
+            # npz stores ml_dtypes widened to f32 and integers as saved;
+            # the template's dtypes are authoritative on the way back
+            casted = []
+            for v, t in zip(tree_flat, tmpl_flat):
+                dt = _template_dtype(t)
+                v = np.asarray(v)
+                casted.append(v if dt is None else v.astype(dt))
             tree = jax.tree.unflatten(jax.tree.structure(template), casted)
             if shardings and name in shardings:
                 tree = jax.tree.map(
                     lambda x, s: jax.device_put(jnp.asarray(x), s),
                     tree, shardings[name])
             else:
-                tree = jax.tree.map(jnp.asarray, tree)
+                # device arrays in the template come back as device arrays;
+                # host-side leaves (numpy telemetry counters, python scalars)
+                # stay numpy — jnp.asarray would silently downcast an int64
+                # frame-clock to int32 under 32-bit jax
+                tree = jax.tree.map(
+                    lambda x, t: jnp.asarray(x)
+                    if isinstance(t, jax.Array) else x,
+                    tree, template)
             out[name] = tree
         return out, manifest["extra"]

@@ -137,6 +137,47 @@ def resolve_fused(n: int, k_eff: int, c_out: int,
     return choice.block_n_fused or n
 
 
+def fleet_key(chips_in_batch: int, n: int, k_eff: int, c_out: int) -> TuneKey:
+    """The table key of a fleet step: the chip axis is NOT part of it.
+
+    A fleet step batches ``chips_in_batch`` chips over a leading vmap axis;
+    inside the vmap every chip runs the SAME per-chip ``(N, K, C)`` kernel
+    (the chip axis becomes an outer grid dimension, the tile geometry is
+    per-chip), so the persisted single-chip ``TileChoice`` is exactly the
+    right one — a ``(G, N, K, C)`` lookup that missed the table and re-tuned
+    per chip mix would both waste a search and let the in-process table grow
+    with the fleet.
+    """
+    del chips_in_batch
+    return shape_key(n, k_eff, c_out)
+
+
+def get_fleet(chips_in_batch: int, n: int, k_eff: int,
+              c_out: int) -> TileChoice:
+    """The choice a ``(chips_in_batch, N, K, C)`` fleet step runs with:
+    the per-chip entry (tuned, loaded, or recorded default) — one table row
+    serves every fleet size."""
+    key = fleet_key(chips_in_batch, n, k_eff, c_out)
+    if key not in _TABLE:
+        _TABLE[key] = default_choice(*key)
+    return _TABLE[key]
+
+
+def resolve_fleet(chips_in_batch: int, n: int, k_eff: int, c_out: int,
+                  block_n: Optional[int] = None,
+                  block_n_elem: Optional[int] = None) -> Tuple[int, int]:
+    """Concrete (block_n, block_n_elem) for one chip row of a fleet step."""
+    del chips_in_batch
+    return resolve(n, k_eff, c_out, block_n, block_n_elem)
+
+
+def resolve_fleet_fused(chips_in_batch: int, n: int, k_eff: int, c_out: int,
+                        block_n: Optional[int] = None) -> int:
+    """Concrete fused-kernel block for one chip row of a fleet step."""
+    del chips_in_batch
+    return resolve_fused(n, k_eff, c_out, block_n)
+
+
 def save_table(path: str) -> None:
     """Persist the in-process table as JSON ({"n,k,c": {...}})."""
     with open(path, "w") as f:

@@ -109,10 +109,16 @@ class RecalibrationScheduler:
             * params_p2m["v_th"]
         ref = target_rates(u, theta, pcfg)
         self._ref = ref
+
         # chip is the ONLY operand: one compile serves every future refresh
-        self._solve = jax.jit(lambda chip: solve_trim(
-            u, theta, chip, ref, pcfg,
-            iters=policy.cal_iters, span=policy.cal_span))
+        def _solve_fn(chip: ChipMaps) -> jax.Array:
+            return solve_trim(u, theta, chip, ref, pcfg,
+                              iters=policy.cal_iters, span=policy.cal_span)
+
+        self._solve = jax.jit(_solve_fn)
+        # the fleet sweep's vmapped tester: K chips refreshed in one
+        # dispatch (jit is lazy — a single-chip engine never compiles it)
+        self._solve_fleet = jax.jit(jax.vmap(_solve_fn))
         self._rates = jax.jit(lambda chip, trim: channel_rates(
             u, theta, chip, trim, pcfg))
         if frame_spec is None:
@@ -179,6 +185,18 @@ class RecalibrationScheduler:
         self._baseline = None
         self._last_err = 0.0
         return trim
+
+    def recalibrate_fleet(self, chips: ChipMaps) -> jax.Array:
+        """Refresh a STACK of chips' trims in ONE vmapped tester dispatch.
+
+        ``chips`` is a ChipMaps pytree with a leading (K,) chip axis (the
+        aged instances a fleet sweep gathered); returns (K, C) trims. One
+        compile serves every future sweep of the same width K. Unlike
+        ``recalibrate`` this does NOT reset the single-chip monitor state —
+        a fleet engine keeps its own per-chip monitors and re-baselines
+        exactly the chips it refreshed (serving/fleet.py).
+        """
+        return self._solve_fleet(chips)
 
     def rate_error(self, chip: ChipMaps, trim: Optional[jax.Array]) -> float:
         """Ground-truth mean |rate − target| of a chip at a trim (audit)."""

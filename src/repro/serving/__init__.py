@@ -1,2 +1,3 @@
 from repro.serving.engine import ServingEngine, make_prefill_step, make_decode_step
+from repro.serving.fleet import FleetEngine, FleetState, FleetSweepPolicy
 from repro.serving.vision import VisionEngine

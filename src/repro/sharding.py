@@ -20,6 +20,11 @@ MeshAxes = Union[None, str, Tuple[str, ...]]
 # logical axis -> mesh axes. None = replicated.
 DEFAULT_RULES: Dict[str, MeshAxes] = {
     "batch": ("pod", "data"),
+    # leading chip axis of a fleet-serving step (serving/fleet.py): chips
+    # spread over the same data-parallel axes; when both "fleet" and
+    # "batch" appear in one spec the fleet axis claims the mesh first and
+    # the per-chip microbatch replicates (chip rows are the parallel unit)
+    "fleet": ("pod", "data"),
     "seq": None,             # set to "model" for sequence parallelism
     "embed": None,
     "vocab": "model",

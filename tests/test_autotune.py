@@ -143,3 +143,54 @@ class TestJitCacheStability:
             ops.p2m_frontend_fused(frames, wq, params["v_th"],
                                    jnp.asarray(th), jax.random.PRNGKey(i))
         assert ops._p2m_frontend_fused._cache_size() == size1
+
+
+class TestFleetLookups:
+    """Fleet-shape-aware lookups (PR 6): a (G, N, K, C) fleet step resolves
+    through the per-chip (N, K, C) table row — the chip axis never keys the
+    table, so the cache cannot grow with the fleet."""
+
+    def test_fleet_key_drops_the_chip_axis(self):
+        for g in (1, 2, 5, 9):
+            assert autotune.fleet_key(g, 4096, 27, 32) == \
+                autotune.shape_key(4096, 27, 32)
+
+    def test_get_fleet_matches_single_chip_choice(self):
+        single = autotune.get(4096, 27, 32)
+        for g in (1, 3, 7):
+            assert autotune.get_fleet(g, 4096, 27, 32) == single
+
+    def test_fleet_resolution_sees_tuned_entries(self):
+        tuned = autotune.TileChoice(block_n=128, block_n_elem=512,
+                                    block_n_fused=256, fused=True)
+        autotune.put(512, 27, 32, tuned)
+        assert autotune.resolve_fleet(4, 512, 27, 32) == (128, 512)
+        assert autotune.resolve_fleet_fused(4, 512, 27, 32) == 256
+        assert autotune.get_fleet(4, 512, 27, 32).fused
+
+    def test_table_does_not_grow_with_chip_count(self):
+        for g in range(1, 12):
+            autotune.get_fleet(g, 2048, 27, 32)
+            autotune.resolve_fleet(g, 2048, 27, 32)
+            autotune.resolve_fleet_fused(g, 2048, 27, 32)
+        assert len(autotune._TABLE) == 1
+
+    def test_fleet_wrapper_jit_cache_stable_across_fleet_sizes(self):
+        """ops.p2m_frontend_fleet vmaps one per-chip kernel: growing the
+        chip axis adds (at most) one cache entry per G, and repeated calls
+        at a G re-use it — the table itself stays at one row."""
+        params = p2m.init_params(jax.random.PRNGKey(0), CFG)
+        wq = p2m.quantize_weights(params["w"], CFG.weight_bits)
+
+        def call(g, seed=0):
+            frames = jax.random.uniform(jax.random.PRNGKey(seed),
+                                        (g, 2, 24, 24, 3))
+            keys = jax.random.split(jax.random.PRNGKey(seed + 1), g)
+            return ops.p2m_frontend_fleet(frames, wq, params["v_th"], keys)
+
+        call(2)
+        size1 = ops._p2m_frontend._cache_size()
+        for i in range(1, 4):
+            call(2, seed=i)
+        assert ops._p2m_frontend._cache_size() == size1
+        assert len(autotune._TABLE) == 1

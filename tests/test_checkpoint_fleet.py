@@ -1,0 +1,130 @@
+"""Checkpoint round-trip regressions surfaced by the fleet work
+(checkpoint/manager.py): integer / bf16 dtype restoration, namedtuple
+pytrees (ChipMaps / DriftMaps), empty containers, python scalars, and the
+``manifest()`` accessor warm restarts bootstrap from."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.lifetime.drift import DriftMaps
+from repro.variation.chip import ChipMaps
+
+
+def _roundtrip(tmp_path, tree, extra=None):
+    m = CheckpointManager(str(tmp_path), async_write=False)
+    m.save(0, {"t": tree}, extra=extra)
+    out, got_extra = m.restore(0, {"t": tree})
+    return out["t"], got_extra
+
+
+class TestDtypeRestoration:
+    def test_integer_arrays_come_back_integer(self, tmp_path):
+        tree = {"ages": np.arange(5, dtype=np.int64),
+                "mask": np.array([True, False]),
+                "ticks": jnp.arange(3, dtype=jnp.uint16)}
+        out, _ = _roundtrip(tmp_path, tree)
+        assert out["ages"].dtype == np.int64
+        assert out["mask"].dtype == np.bool_
+        assert out["ticks"].dtype == jnp.uint16
+        assert np.array_equal(out["ages"], tree["ages"])
+
+    def test_int64_counters_stay_numpy_not_downcast(self, tmp_path):
+        """Host-side telemetry (e.g. a fleet's frame clocks) is int64
+        numpy; restoring through jnp.asarray would silently truncate to
+        int32 under 32-bit jax — the restore must keep host leaves host."""
+        big = np.array([2 ** 40], dtype=np.int64)
+        out, _ = _roundtrip(tmp_path, {"clock": big})
+        assert isinstance(out["clock"], np.ndarray)
+        assert out["clock"].dtype == np.int64
+        assert out["clock"][0] == 2 ** 40
+
+    def test_bf16_roundtrips_through_f32_widening(self, tmp_path):
+        x = jnp.asarray([0.5, 1.25, -3.0], jnp.bfloat16)
+        out, _ = _roundtrip(tmp_path, {"w": x})
+        assert out["w"].dtype == jnp.bfloat16
+        assert jnp.array_equal(out["w"], x)
+
+    def test_device_template_restores_as_device_array(self, tmp_path):
+        out, _ = _roundtrip(tmp_path, {"trim": jnp.ones((4,), jnp.float32)})
+        assert isinstance(out["trim"], jax.Array)
+
+    def test_python_scalars_restore_matching_dtype(self, tmp_path):
+        out, _ = _roundtrip(tmp_path, {"count": 7, "energy": 1.5,
+                                       "flag": True})
+        assert int(out["count"]) == 7
+        assert np.asarray(out["count"]).dtype == np.int64
+        assert float(out["energy"]) == 1.5
+        assert bool(out["flag"]) is True
+
+
+class TestStructuredPytrees:
+    def test_chipmaps_namedtuple_roundtrips(self, tmp_path):
+        c, n = 4, 8
+        key = jax.random.PRNGKey(0)
+        chip = ChipMaps(*[jax.random.normal(jax.random.fold_in(key, i),
+                                            (c, n) if i < 4 else (c,))
+                          for i in range(6)])
+        out, _ = _roundtrip(tmp_path, {"chip": chip})
+        assert isinstance(out["chip"], ChipMaps)
+        for a, b in zip(out["chip"], chip):
+            assert jnp.array_equal(a, b)
+
+    def test_stacked_fleet_tree_roundtrips(self, tmp_path):
+        """The exact shape of a fleet checkpoint: stacked namedtuples plus
+        host telemetry arrays in one tree."""
+        f, c, n = 3, 4, 8
+        z = lambda *s: jnp.ones(s, jnp.float32)
+        tree = {"chips0": ChipMaps(z(f, c, n), z(f, c, n), z(f, c, n),
+                                   z(f, c, n), z(f, c), z(f, c)),
+                "maps": DriftMaps(z(f, c, n), z(f, c, n), z(f, c, n),
+                                  z(f, c, n), z(f, c), z(f, c)),
+                "trim": z(f, c),
+                "age_frames": np.array([10, 0, 99], np.int64)}
+        out, _ = _roundtrip(tmp_path, tree)
+        assert isinstance(out["chips0"], ChipMaps)
+        assert isinstance(out["maps"], DriftMaps)
+        assert out["age_frames"].dtype == np.int64
+        assert np.array_equal(out["age_frames"], tree["age_frames"])
+
+    def test_empty_dict_and_list_survive(self, tmp_path):
+        tree = {"empty": {}, "items": [], "nested": {"also": {}},
+                "x": np.ones((2,))}
+        out, _ = _roundtrip(tmp_path, tree)
+        assert out["empty"] == {}
+        assert out["items"] == []
+        assert out["nested"] == {"also": {}}
+
+    def test_tuple_and_list_types_preserved(self, tmp_path):
+        tree = {"tup": (np.ones((2,)), np.zeros((3,))),
+                "lst": [np.ones((1,))]}
+        out, _ = _roundtrip(tmp_path, tree)
+        assert isinstance(out["tup"], tuple)
+        assert isinstance(out["lst"], list)
+
+
+class TestManifest:
+    def test_manifest_reads_extra_without_restoring(self, tmp_path):
+        extra = {"chip_ids": [3, 1, 4], "seed": 0,
+                 "theta_carry": {"3": 0.57}}
+        m = CheckpointManager(str(tmp_path), async_write=False)
+        m.save(2, {"t": {"x": np.ones((2,))}}, extra=extra)
+        man = m.manifest(2)
+        assert man["step"] == 2
+        assert man["extra"]["chip_ids"] == [3, 1, 4]
+        assert man["extra"]["theta_carry"]["3"] == 0.57
+        assert man["trees"] == ["t"]
+
+    def test_manifest_missing_step_raises(self, tmp_path):
+        m = CheckpointManager(str(tmp_path), async_write=False)
+        with pytest.raises(FileNotFoundError):
+            m.manifest(5)
+
+    def test_float_extra_roundtrips_exactly(self, tmp_path):
+        """Theta carries ride in the JSON manifest: python floats must
+        survive save->load bit-for-bit (json uses repr round-tripping)."""
+        v = 0.5706748198690934
+        m = CheckpointManager(str(tmp_path), async_write=False)
+        m.save(0, {"t": {"x": np.ones(1)}}, extra={"carry": v})
+        assert m.manifest(0)["extra"]["carry"] == v
