@@ -77,48 +77,13 @@ def _time_ms(fn, repeats: int = 10) -> float:
 
 
 def quick_check() -> int:
-    """CI census gate: the fleet step's pallas kernel census must equal the
-    single-chip step's (vmap batches the grid; op counts cannot grow)."""
-    import jax
-
-    from repro.launch import hlo_analysis
-    from repro.serving import FleetEngine
-
-    cfg, params, frames = _setup(batch=8)
-    failures = []
-    censuses = {}
-    for g in (1, 2):
-        fe = FleetEngine(cfg, params, backend="pallas", seed=0,
-                         chips_per_step=g, fused_stream=False)
-        for c in range(g):
-            fe.add_chip(c)
-        idx = jax.numpy.arange(g, dtype=jax.numpy.int32)
-        chips = jax.tree.map(lambda a: a[idx], fe.state.chips0)
-        trims = fe.state.trim[idx]
-        gf = jax.numpy.stack([frames] * g)
-        keys = jax.random.split(jax.random.PRNGKey(0), g)
-        compiled = fe._step.lower(params, chips, trims, gf, keys).compile()
-        censuses[g] = hlo_analysis.matmul_stats(compiled.as_text())
-    one, two = censuses[1], censuses[2]
-    for field in ("dot_count", "conv_count"):
-        if one[field] != two[field]:
-            failures.append(f"{field}: G=1 has {one[field]}, "
-                            f"G=2 has {two[field]}")
-    if two["matmul_flops"] > 2.05 * one["matmul_flops"]:
-        failures.append(
-            f"matmul_flops: G=2 ({two['matmul_flops']:.0f}) exceeds 2x "
-            f"G=1 ({one['matmul_flops']:.0f}) — the chip axis is "
-            "duplicating work, not batching it")
-    for g, c in censuses.items():
-        print(f"  G={g}: dot={c['dot_count']} conv={c['conv_count']} "
-              f"matmul_flops={c['matmul_flops']:.3g}")
-    if failures:
-        print("REGRESSION — fleet step census drifted:", file=sys.stderr)
-        for f in failures:
-            print(f"  {f}", file=sys.stderr)
-        return 1
-    print("quick census gate: OK")
-    return 0
+    """CI census gate: delegates to ``repro.analysis.census``, the single
+    census implementation — identical rule/thresholds to the pre-refactor
+    private copy (G=2 fleet step must run the SAME dot/conv census as G=1,
+    with <= 2.05x the matmul flops: vmap batches the grid, never
+    duplicates it)."""
+    from repro.analysis import census
+    return census.quick_fleet_gate()
 
 
 def _single_chip_parity(cfg, params, frames) -> bool:

@@ -50,25 +50,6 @@ import time
 import jax
 import jax.numpy as jnp
 
-# --- the --quick CI gate's recorded expectations ----------------------------
-# static HLO census of each backend's jitted frontend step (batch 16, 32x32)
-EXPECTED_CENSUS = {
-    "pallas": {"dot_count": 1, "conv_count": 0},   # ONE packed dot, no conv
-    "analog": {"dot_count": 0, "conv_count": 1},   # packed two-phase conv
-    "device": {"dot_count": 0, "conv_count": 1},
-    "ideal": {"dot_count": 0, "conv_count": 1},
-}
-# pallas census matmul flops vs the ideal backend's single-conv census
-PALLAS_MATMUL_BUDGET = 1.2
-
-
-def _cost(compiled) -> dict:
-    cost = compiled.cost_analysis()
-    if isinstance(cost, (list, tuple)):
-        cost = cost[0] if cost else {}
-    return cost
-
-
 def _time_ms(fn, *args, repeats: int = 10) -> float:
     """Best-of-N wall clock (min is the standard noise-robust estimator on
     a shared host — the steady-state cost with the fewest interruptions)."""
@@ -128,63 +109,13 @@ def legacy_double_conv_step(fe_cfg, block_n: int = PREFIX_BLOCK_N):
     return step
 
 
-def _bench_setup(batch: int = 16):
-    from repro import frontend
-    from repro.core import p2m
-    cfg = p2m.P2MConfig()
-    fe_cfg = frontend.FrontendConfig(p2m=cfg, global_shutter=False)
-    fe = frontend.SensorFrontend(fe_cfg)
-    params = fe.init(jax.random.PRNGKey(0))
-    frames = jax.random.uniform(jax.random.PRNGKey(1),
-                                (batch, 32, 32, 3))
-    key = jax.random.PRNGKey(2)
-    return fe_cfg, fe, params, frames, key
-
-
-def _backend_censuses(fe, params, frames, key):
-    from repro import frontend
-    from repro.launch import hlo_analysis
-    out = {}
-    for mode in frontend.list_backends():
-        step = jax.jit(lambda p, x, k, m=mode: fe(p, x, key=k, mode=m)[0])
-        compiled = step.lower(params, frames, key).compile()
-        out[mode] = {"census": hlo_analysis.matmul_stats(compiled.as_text()),
-                     "cost": _cost(compiled), "step": step}
-    return out
-
-
 def quick_check() -> int:
-    """CI census gate: no timing, fail fast on structural drift."""
-    _, fe, params, frames, key = _bench_setup()
-    info = _backend_censuses(fe, params, frames, key)
-    failures = []
-    for mode, want in EXPECTED_CENSUS.items():
-        got = info[mode]["census"]
-        for field, val in want.items():
-            if got[field] != val:
-                failures.append(
-                    f"{mode}.{field}: expected {val}, got {got[field]}")
-    ideal_flops = info["ideal"]["census"]["matmul_flops"]
-    pallas_flops = info["pallas"]["census"]["matmul_flops"]
-    ratio = pallas_flops / ideal_flops
-    if ratio > PALLAS_MATMUL_BUDGET:
-        failures.append(
-            f"pallas.matmul_flops: {pallas_flops:.0f} is {ratio:.2f}x the "
-            f"ideal census ({ideal_flops:.0f}); budget is "
-            f"{PALLAS_MATMUL_BUDGET}x")
-    for mode in sorted(EXPECTED_CENSUS):
-        c = info[mode]["census"]
-        print(f"  {mode:8s} dot={c['dot_count']} conv={c['conv_count']} "
-              f"matmul_flops={c['matmul_flops']:.3g}")
-    print(f"  pallas/ideal matmul flops: {ratio:.2f}x "
-          f"(budget {PALLAS_MATMUL_BUDGET}x)")
-    if failures:
-        print("REGRESSION — frontend census drifted:", file=sys.stderr)
-        for f in failures:
-            print(f"  {f}", file=sys.stderr)
-        return 1
-    print("quick census gate: OK")
-    return 0
+    """CI census gate (no timing): delegates to ``repro.analysis.census``,
+    the single census implementation — identical expectations/thresholds to
+    the pre-refactor private copy (pallas dot==1/conv==0, every other
+    backend a single conv, pallas flops <= 1.2x the ideal census)."""
+    from repro.analysis import census
+    return census.quick_frontend_gate()
 
 
 def run(smoke: bool = False) -> dict:
@@ -197,7 +128,9 @@ def run(smoke: bool = False) -> dict:
     # serving batch sizes
     batch = 16
     repeats = 5 if smoke else 20
-    fe_cfg, fe, params, frames, key = _bench_setup(batch)
+    from repro.analysis import census as analysis_census
+    fe, params, frames, key = analysis_census._frontend_setup(batch)
+    fe_cfg = fe.cfg
     pcfg = fe_cfg.p2m
     wq = p2m.quantize_weights(params["w"], pcfg.weight_bits)
     n = batch * blocking.conv_out_hw(32, pcfg.stride) ** 2
@@ -216,7 +149,7 @@ def run(smoke: bool = False) -> dict:
                "autotune": {"choice": choice.to_json(),
                             "report": tune_report}}
 
-    info = _backend_censuses(fe, params, frames, key)
+    info = analysis_census.frontend_step_info(batch)
     for mode, d in info.items():
         census, cost = d["census"], d["cost"]
         # ideal/device are timed solo; the analog/pallas pair (the headline
@@ -283,7 +216,7 @@ def run(smoke: bool = False) -> dict:
         wall = ms["prefix_double_conv" if block_n == PREFIX_BLOCK_N
                   else "prefix_same_tile"]
         census = hlo_analysis.matmul_stats(compiled.as_text())
-        cost = _cost(compiled)
+        cost = analysis_census.compile_cost(compiled)
         results[tag] = {
             "wall_ms": wall,
             "frames_per_s": batch / (wall / 1e3),

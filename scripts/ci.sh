@@ -10,9 +10,11 @@
 # their package (repro.variation / repro.lifetime / repro.serving) to an
 # error. Long fleet Monte-Carlo tests are marked `slow` and excluded from
 # the tier-1 run (use `-m slow` to run them).
-# The perf-regression smokes run FIRST and cheap: the frontend --quick
-# census gate fails the build if the pallas dot/conv structure or matmul
-# flop budget drifts, and the fleet --quick gate fails it if the vmapped
+# scripts/lint.sh runs FIRST and cheap (DESIGN.md §11): the AST rule pass
+# plus the entry-point jaxpr/HLO census against ANALYSIS_BUDGETS.json.
+# This subsumes the old per-bench --quick census gates (one census
+# implementation, identical thresholds): it fails the build if the pallas
+# dot/conv structure or matmul flop budget drifts, or if the vmapped
 # fleet step stops batching the kernel (census growing with the chip
 # axis). Wall clock stays informational — no flaky timing gates on shared
 # hosts. The examples smoke keeps the README entry points importable and
@@ -20,10 +22,7 @@
 # Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python benchmarks/frontend_bench.py --quick
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python benchmarks/fleet_bench.py --quick
+scripts/lint.sh
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/frontend_bench.py --smoke --out BENCH_frontend.json

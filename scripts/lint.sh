@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Static-analysis gate (DESIGN.md §11): the repo-rule AST pass plus the
+# jaxpr/HLO census of every public entry point, checked against the
+# checked-in ANALYSIS_BUDGETS.json. Tracing + AOT compilation only — no
+# kernel executes, no benchmark runs. A stale budget file FAILS with
+# regeneration instructions (python -m repro.analysis --update-budgets);
+# the reviewed budget diff is the op-structure claim of a PR.
+# Usage: scripts/lint.sh [extra `python -m repro.analysis` args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis "$@"

@@ -1,0 +1,25 @@
+"""repro.analysis — the static-analysis layer over the reproduction
+(DESIGN.md §11).
+
+The paper's claims survive in this repo as *invariants* (ADC-less first
+layer == zero conv ops in the pallas step, 1x-ideal matmul FLOPs,
+zero-recompile serving == jit-cache 1, physics single-sourced in core/).
+This package turns those invariants into machinery every PR runs:
+
+``census``      declarative jaxpr/HLO op census of every public entry point,
+                checked against the repo-root ``ANALYSIS_BUDGETS.json``
+``tracecheck``  retrace sanitizer: records compilation events and names
+                WHICH argument's aval changed when a jit cache grows
+``astlint``     repo-specific AST rules (physics-constant anti-fork,
+                vmap-outside-jit, wall-clock/host-rng bans, frozen configs,
+                import-graph orphans)
+
+CLI: ``python -m repro.analysis`` (scripts/lint.sh) runs the AST pass and
+the census check; ``--update-budgets`` regenerates the budget file.
+"""
+from repro.analysis import astlint, census, tracecheck
+from repro.analysis.tracecheck import (RetraceError, TraceRecorder,
+                                       assert_jit_cache, capture, no_retrace)
+
+__all__ = ["astlint", "census", "tracecheck", "RetraceError",
+           "TraceRecorder", "assert_jit_cache", "capture", "no_retrace"]

@@ -1,0 +1,88 @@
+"""CLI for the static-analysis layer: ``python -m repro.analysis``.
+
+Default run (what ``scripts/lint.sh`` invokes): the AST rule pass, then the
+full entry-point census checked against ``ANALYSIS_BUDGETS.json`` plus the
+structural paper invariants. Exit code 0 only if everything holds.
+
+    python -m repro.analysis                  # AST pass + census check
+    python -m repro.analysis --ast-only       # fast: no tracing/compiling
+    python -m repro.analysis --census-only
+    python -m repro.analysis --update-budgets # regenerate the budget file
+    python -m repro.analysis --budgets PATH   # non-default budget location
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis import astlint, census
+
+
+def _repo_root() -> str:
+    """The repo root is two levels above src/repro/analysis/ -> src/ -> /."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis",
+                                 description=__doc__)
+    ap.add_argument("--budgets", default=None,
+                    help=f"budget file (default: {census.BUDGETS_BASENAME} "
+                         "at the repo root)")
+    ap.add_argument("--update-budgets", action="store_true",
+                    help="re-census every entry point and rewrite the "
+                         "budget file (waivers preserved); review the diff")
+    ap.add_argument("--ast-only", action="store_true",
+                    help="run only the AST rule pass (no jax tracing)")
+    ap.add_argument("--census-only", action="store_true",
+                    help="run only the census check")
+    args = ap.parse_args(argv)
+
+    repo_root = _repo_root()
+    budgets_path = args.budgets or os.path.join(repo_root,
+                                                census.BUDGETS_BASENAME)
+    budgets = {}
+    if os.path.exists(budgets_path):
+        budgets = census.load_budgets(budgets_path)
+
+    failed = False
+
+    if not args.census_only:
+        remaining, waived = astlint.run(
+            repo_root, budgets.get("waivers", {}).get("ast", []))
+        for v in waived:
+            print(f"  waived: {v}")
+        for v in remaining:
+            print(f"FAIL: {v}", file=sys.stderr)
+        print(f"ast pass: {len(remaining)} violation(s), "
+              f"{len(waived)} waived")
+        failed |= bool(remaining)
+
+    if not args.ast_only:
+        print("censusing entry points (tracing + compiling, no execution)…")
+        results = census.collect()
+        if args.update_budgets:
+            path = census.update_budgets(results, budgets_path)
+            print(f"wrote {len(results)} entry budgets to {path} — review "
+                  "the diff before committing")
+            # even a fresh budget must satisfy the structural invariants
+            fails = census.structural_failures(results)
+        else:
+            if not budgets:
+                print(f"FAIL: {budgets_path} missing — run with "
+                      "--update-budgets to create it", file=sys.stderr)
+                return 1
+            fails = census.check(results, budgets)
+        for f in fails:
+            print(f"FAIL: {f}", file=sys.stderr)
+        print(f"census: {len(results)} entry points, "
+              f"{len(fails)} failure(s)")
+        failed |= bool(fails)
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

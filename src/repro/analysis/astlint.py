@@ -1,0 +1,387 @@
+"""Repo-specific AST rules, distilled from the failure modes of PRs 1-6.
+
+Each rule guards an invariant that was broken (or nearly broken) once:
+
+``physics-constants``  numeric physics constants live ONLY in ``core/``
+                       (anti-fork: PR 2 nearly grew a second V_half in a
+                       bench; a drifted copy silently changes the device)
+``vmap-needs-jit``     ``jax.vmap`` at a call site outside a jitted inner
+                       re-traces per call (PR 6's ~10x fleet-step wall trap)
+``no-wallclock``       ``time.time`` in library code — non-monotonic under
+                       NTP; timings must use ``time.perf_counter``
+``no-host-rng``        ``numpy.random`` / ``PRNGKey(<literal>)`` in library
+                       code — host RNG breaks reproducibility and a baked
+                       seed hides the key-threading bug class of PR 4
+``frozen-config``      ``*Config``/``*Params`` dataclasses must be
+                       ``frozen=True`` — hashable jit statics, no aliasing
+``orphan-module``      every module under ``src/repro`` must be reachable
+                       from the test/bench/example import graph or a
+                       declared CLI root — dead modules rot silently
+
+Waive a finding either inline (``# analysis: waive=<rule>`` on the flagged
+line) or with a ``{rule, path, reason}`` entry under ``waivers.ast`` in
+``ANALYSIS_BUDGETS.json``; waivers without a reason are rejected.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+# python -m entry points with no importer: reachable by declaration
+CLI_ROOTS = (
+    "repro.launch.train",       # python -m repro.launch.train (verify recipe)
+    "repro.launch.serve",       # python -m repro.launch.serve
+    "repro.analysis.__main__",  # python -m repro.analysis (scripts/lint.sh)
+)
+
+RULES = ("physics-constants", "vmap-needs-jit", "no-wallclock",
+         "no-host-rng", "frozen-config", "orphan-module")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str          # repo-relative, e.g. "src/repro/launch/serve.py"
+    lineno: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.lineno}: [{self.rule}] {self.message}"
+
+
+# --- helpers ----------------------------------------------------------------
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jax.random.PRNGKey' for an Attribute/Name chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    d = _dotted(node)
+    return d is not None and d.split(".")[-1] in ("jit", "pjit")
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    if _is_jit_expr(dec):
+        return True                       # @jax.jit
+    if isinstance(dec, ast.Call):
+        if _is_jit_expr(dec.func):
+            return True                   # @jax.jit(static_argnames=...)
+        d = _dotted(dec.func)
+        if d is not None and d.split(".")[-1] == "partial" and dec.args:
+            return _is_jit_expr(dec.args[0])   # @partial(jax.jit, ...)
+    return False
+
+
+def _sig_digits(value: float) -> int:
+    text = repr(abs(value))
+    if "e" in text or "E" in text:
+        text = text.split("e")[0].split("E")[0]
+    digits = text.replace(".", "").strip("0")
+    return len(digits)
+
+
+class _FileLint:
+    """Runs the per-file rules (everything except the import graph)."""
+
+    def __init__(self, path: str, rel: str, source: str,
+                 protected_constants: Dict[float, str]):
+        self.rel = rel
+        self.source_lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.protected = protected_constants
+        self.in_core = "/core/" in rel.replace(os.sep, "/")
+        self.violations: List[Violation] = []
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+
+    def _flag(self, rule: str, node: ast.AST, message: str) -> None:
+        lineno = getattr(node, "lineno", 0)
+        line = (self.source_lines[lineno - 1]
+                if 0 < lineno <= len(self.source_lines) else "")
+        if (f"analysis: waive={rule}" in line
+                or "analysis: waive=all" in line):
+            return
+        self.violations.append(Violation(rule, self.rel, lineno, message))
+
+    def _ancestors(self, node: ast.AST) -> Iterable[ast.AST]:
+        while node in self.parents:
+            node = self.parents[node]
+            yield node
+
+    # -- rules ---------------------------------------------------------------
+    def _check_vmap(self, node: ast.Call) -> None:
+        d = _dotted(node.func)
+        if d is None or d.split(".")[-1] != "vmap":
+            return
+        for anc in self._ancestors(node):
+            if isinstance(anc, ast.Call) and _is_jit_expr(anc.func):
+                return                    # jax.jit(jax.vmap(f))
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(_is_jit_decorator(dec) for dec in anc.decorator_list):
+                    return                # vmap inside a jitted inner
+        self._flag("vmap-needs-jit", node,
+                   "jax.vmap applied outside a jitted inner — the mapped "
+                   "function re-traces on every call (PR 6 trap); wrap the "
+                   "call site in jax.jit or move it under a @jax.jit inner")
+
+    def _check_wallclock(self, node: ast.Attribute) -> None:
+        if _dotted(node) == "time.time":
+            self._flag("no-wallclock", node,
+                       "time.time() is not monotonic; use "
+                       "time.perf_counter() for timing")
+
+    def _check_host_rng(self, node: ast.AST) -> None:
+        if isinstance(node, ast.Attribute):
+            # match the exact `np.random` node (present as a subexpression
+            # of every `np.random.*` use) so each use flags exactly once
+            d = _dotted(node)
+            if d in ("numpy.random", "np.random"):
+                self._flag("no-host-rng", node,
+                           f"{d}: host-side RNG in library code — thread a "
+                           "jax.random key instead")
+        if isinstance(node, ast.Call):
+            d = _dotted(node.func)
+            if (d is not None and d.split(".")[-1] == "PRNGKey"
+                    and len(node.args) == 1
+                    and isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, (int, float))):
+                self._flag("no-host-rng", node,
+                           f"PRNGKey({node.args[0].value!r}) with a literal "
+                           "seed in library code — accept a key from the "
+                           "caller")
+
+    def _check_frozen_config(self, node: ast.ClassDef) -> None:
+        if not (node.name.endswith("Config") or node.name.endswith("Params")):
+            return
+        for dec in node.decorator_list:
+            is_bare = (_dotted(dec) or "").split(".")[-1] == "dataclass"
+            is_call = (isinstance(dec, ast.Call)
+                       and (_dotted(dec.func) or "").split(".")[-1]
+                       == "dataclass")
+            if not (is_bare or is_call):
+                continue
+            frozen = (not is_bare) and any(
+                kw.arg == "frozen" and isinstance(kw.value, ast.Constant)
+                and kw.value.value is True for kw in dec.keywords)
+            if not frozen:
+                self._flag("frozen-config", node,
+                           f"dataclass {node.name} must be frozen=True "
+                           "(hashable jit static; no post-construction "
+                           "mutation)")
+            return
+
+    def _check_constants(self, node: ast.Constant) -> None:
+        if self.in_core or not isinstance(node.value, float):
+            return
+        if node.value in self.protected:
+            self._flag("physics-constants", node,
+                       f"literal {node.value!r} duplicates the physics "
+                       f"constant defined in {self.protected[node.value]} — "
+                       "import it from repro.core instead of forking the "
+                       "value")
+
+    def run(self) -> List[Violation]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                self._check_vmap(node)
+            if isinstance(node, ast.Attribute):
+                self._check_wallclock(node)
+            if isinstance(node, (ast.Attribute, ast.Call)):
+                self._check_host_rng(node)
+            if isinstance(node, ast.ClassDef):
+                self._check_frozen_config(node)
+            if isinstance(node, ast.Constant):
+                self._check_constants(node)
+        return self.violations
+
+
+# --- protected physics constants -------------------------------------------
+
+def collect_physics_constants(core_dir: str) -> Dict[float, str]:
+    """Float literals with >= 2 significant digits defined in ``core/``.
+
+    The significance filter keeps generic values (0.9 momentum, 0.5, 2.0)
+    out of the protected set — only device-specific numbers (0.062 V,
+    0.9717 polarization, 47 kT barrier, ...) are anti-fork protected.
+    """
+    protected: Dict[float, str] = {}
+    for fname in sorted(os.listdir(core_dir)):
+        if not fname.endswith(".py"):
+            continue
+        with open(os.path.join(core_dir, fname)) as f:
+            tree = ast.parse(f.read(), filename=fname)
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Constant)
+                    and isinstance(node.value, float)
+                    and _sig_digits(node.value) >= 2):
+                protected.setdefault(node.value, f"core/{fname}")
+    return protected
+
+
+# --- import-graph reachability ---------------------------------------------
+
+def _module_name(rel: str) -> str:
+    """'src/repro/core/mtj.py' -> 'repro.core.mtj'."""
+    parts = rel.replace(os.sep, "/").split("/")
+    parts = parts[parts.index("repro"):]
+    parts[-1] = parts[-1][:-3]                       # strip .py
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _imported_modules(tree: ast.AST, importer: str) -> Set[str]:
+    """All absolute 'repro.*' module names a module's imports refer to."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.split(".")[0] == "repro":
+                    out.add(alias.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level == 0:
+                base = node.module or ""
+            else:
+                # level=1 -> the importer's own package, level=2 -> its
+                # parent, ... (callers pass "pkg.__init__" for package
+                # inits so the same arithmetic applies)
+                pkg = importer.split(".")[:-node.level]
+                base = ".".join(pkg)
+                if node.module:
+                    base = f"{base}.{node.module}" if base else node.module
+            if not base or base.split(".")[0] != "repro":
+                continue
+            out.add(base)
+            for alias in node.names:
+                out.add(f"{base}.{alias.name}")
+    return out
+
+
+def orphan_modules(repo_root: str) -> List[Violation]:
+    """Modules under src/repro unreachable from tests/benchmarks/examples
+    imports and the declared CLI roots."""
+    src = os.path.join(repo_root, "src")
+    modules: Dict[str, str] = {}                     # name -> rel path
+    trees: Dict[str, ast.AST] = {}
+    for dirpath, _dirnames, filenames in os.walk(os.path.join(src, "repro")):
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            full = os.path.join(dirpath, fname)
+            rel = os.path.relpath(full, repo_root)
+            name = _module_name(rel)
+            modules[name] = rel
+            with open(full) as f:
+                trees[name] = ast.parse(f.read(), filename=full)
+
+    def resolve(imported: str) -> Set[str]:
+        """An import of 'repro.a.b' marks repro, repro.a, repro.a.b."""
+        hits: Set[str] = set()
+        parts = imported.split(".")
+        for i in range(1, len(parts) + 1):
+            prefix = ".".join(parts[:i])
+            if prefix in modules:
+                hits.add(prefix)
+        return hits
+
+    edges: Dict[str, Set[str]] = {}
+    for name, tree in trees.items():
+        # for __init__ modules, relative imports resolve against the
+        # package itself; for plain modules, against the parent package
+        is_pkg = modules[name].endswith("__init__.py")
+        importer = name + ".__init__" if is_pkg else name
+        targets: Set[str] = set()
+        for imp in _imported_modules(tree, importer):
+            targets |= resolve(imp)
+        edges[name] = targets - {name}
+
+    roots: Set[str] = {m for r in CLI_ROOTS for m in resolve(r)}
+    for top in ("tests", "benchmarks", "examples"):
+        d = os.path.join(repo_root, top)
+        if not os.path.isdir(d):
+            continue
+        for dirpath, _dn, filenames in os.walk(d):
+            for fname in filenames:
+                if not fname.endswith(".py"):
+                    continue
+                with open(os.path.join(dirpath, fname)) as f:
+                    tree = ast.parse(f.read(), filename=fname)
+                for imp in _imported_modules(tree, importer="external"):
+                    roots |= resolve(imp)
+
+    reachable = set(roots)
+    frontier = list(roots)
+    while frontier:
+        cur = frontier.pop()
+        for nxt in edges.get(cur, ()):
+            if nxt not in reachable:
+                reachable.add(nxt)
+                frontier.append(nxt)
+
+    out: List[Violation] = []
+    for name in sorted(set(modules) - reachable):
+        out.append(Violation(
+            "orphan-module", modules[name], 1,
+            f"module {name} is unreachable from tests/, benchmarks/, "
+            "examples/ or any declared CLI root — wire it in, delete it, "
+            "or waive it with a reason"))
+    return out
+
+
+# --- driver -----------------------------------------------------------------
+
+def lint_repo(repo_root: str) -> List[Violation]:
+    """All per-file rules over src/repro plus the import-graph check."""
+    core_dir = os.path.join(repo_root, "src", "repro", "core")
+    protected = collect_physics_constants(core_dir)
+    violations: List[Violation] = []
+    for dirpath, _dn, filenames in os.walk(
+            os.path.join(repo_root, "src", "repro")):
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            full = os.path.join(dirpath, fname)
+            rel = os.path.relpath(full, repo_root)
+            with open(full) as f:
+                source = f.read()
+            violations += _FileLint(full, rel, source, protected).run()
+    violations += orphan_modules(repo_root)
+    return violations
+
+
+def apply_waivers(violations: Sequence[Violation],
+                  waivers: Sequence[Dict]) -> Tuple[List[Violation],
+                                                    List[Violation]]:
+    """Split into (remaining, waived); a waiver matches on (rule, path)
+    and MUST carry a non-empty reason."""
+    index: Set[Tuple[str, str]] = set()
+    for w in waivers:
+        if not w.get("reason"):
+            raise ValueError(f"AST waiver {w!r} has no reason — every "
+                             "waiver must say why")
+        index.add((w["rule"], w["path"].replace(os.sep, "/")))
+    remaining: List[Violation] = []
+    waived: List[Violation] = []
+    for v in violations:
+        key = (v.rule, v.path.replace(os.sep, "/"))
+        (waived if key in index else remaining).append(v)
+    return remaining, waived
+
+
+def run(repo_root: str,
+        waivers: Sequence[Dict] = ()) -> Tuple[List[Violation],
+                                               List[Violation]]:
+    """Lint the repo and apply waivers; returns (remaining, waived)."""
+    return apply_waivers(lint_repo(repo_root), waivers)

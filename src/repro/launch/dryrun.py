@@ -251,7 +251,7 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
             rules = sharding.ShardingRules.make(merged)
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = 512 if multi_pod else 256
-    t0 = time.time()
+    t0 = time.perf_counter()
     record: Dict[str, Any] = {
         "arch": arch_name, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16", "tag": tag,
@@ -260,9 +260,9 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
         with mesh:
             fn, args = build_cell(cfg, shape, mesh, rules, opt_cfg)
             lowered = fn.lower(*args)
-            t_lower = time.time() - t0
+            t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.perf_counter() - t0 - t_lower
             mem = compiled.memory_analysis()
             cost = cost_analysis_dict(compiled)
             coll = hlo_analysis.collective_stats(compiled.as_text())

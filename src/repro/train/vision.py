@@ -15,17 +15,10 @@ import jax.numpy as jnp
 from repro.models import vision
 
 
-def fit(params, cfg: vision.VisionConfig, stream, steps: int,
-        lr: float = 3e-3, key: Optional[jax.Array] = None,
-        log_every: Optional[int] = None,
-        log_fn: Callable[[str], None] = print):
-    """Plain-SGD training through the SensorFrontend.
-
-    ``key`` (folded per step) reaches the frontend via ``vision.loss_fn`` —
-    this is what drives the Fig. 8 noise-injection study when
-    ``cfg.p2m.noise_p_*`` are set.
-    """
-    key = key if key is not None else jax.random.PRNGKey(42)
+def make_step(cfg: vision.VisionConfig, lr: float = 3e-3):
+    """The jitted SGD train step ``(params, batch, key) -> (params, loss,
+    aux)``. Exposed as its own builder so ``repro.analysis.census`` can
+    trace the exact step :func:`fit` runs."""
 
     @jax.jit
     def step(p, batch, k):
@@ -36,6 +29,22 @@ def fit(params, cfg: vision.VisionConfig, stream, steps: int,
         # stats returned by the train-mode forward back into the tree
         p = vision.apply_bn_state(p, aux.pop("bn_state", None))
         return p, l, aux
+
+    return step
+
+
+def fit(params, cfg: vision.VisionConfig, stream, steps: int,
+        lr: float = 3e-3, key: Optional[jax.Array] = None,
+        log_every: Optional[int] = None,
+        log_fn: Callable[[str], None] = print):
+    """Plain-SGD training through the SensorFrontend.
+
+    ``key`` (folded per step) reaches the frontend via ``vision.loss_fn`` —
+    this is what drives the Fig. 8 noise-injection study when
+    ``cfg.p2m.noise_p_*`` are set.
+    """
+    key = key if key is not None else jax.random.PRNGKey(42)  # analysis: waive=no-host-rng
+    step = make_step(cfg, lr)
 
     for i in range(steps):
         params, l, aux = step(params, stream.next_batch(),

@@ -30,6 +30,16 @@ for path in (_HERE, _SRC, _ROOT):
 import pytest  # noqa: E402  (after the XLA_FLAGS/path bootstrap above)
 
 
+@pytest.fixture
+def trace_recorder():
+    """A live ``repro.analysis.tracecheck`` recorder: jitted calls made
+    inside the test are recorded so ``tracecheck.assert_jit_cache(fn,
+    recorder=trace_recorder)`` can name WHICH argument forced a retrace."""
+    from repro.analysis import tracecheck
+    with tracecheck.capture() as rec:
+        yield rec
+
+
 def pytest_configure(config):
     config.addinivalue_line(
         "markers",

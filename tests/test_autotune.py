@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import tracecheck
 from repro.core import p2m
 from repro.kernels import autotune, ops
 
@@ -118,19 +119,27 @@ class TestJitCacheStability:
         frames = jax.random.uniform(jax.random.PRNGKey(1), (2, 24, 24, 3))
         ops.p2m_frontend(frames, wq, params["v_th"], jax.random.PRNGKey(0))
         size1 = ops._p2m_frontend._cache_size()
-        for i in range(1, 4):
-            ops.p2m_frontend(
-                jax.random.uniform(jax.random.PRNGKey(i), (2, 24, 24, 3)),
-                wq, params["v_th"], jax.random.PRNGKey(i))
-        assert ops._p2m_frontend._cache_size() == size1
-        frames2 = jax.random.uniform(jax.random.PRNGKey(9), (4, 24, 24, 3))
-        ops.p2m_frontend(frames2, wq, params["v_th"], jax.random.PRNGKey(0))
-        size2 = ops._p2m_frontend._cache_size()
-        assert size2 <= size1 + 1
-        for i in range(1, 3):
+        with tracecheck.capture() as rec:
+            for i in range(1, 4):
+                ops.p2m_frontend(
+                    jax.random.uniform(jax.random.PRNGKey(i),
+                                       (2, 24, 24, 3)),
+                    wq, params["v_th"], jax.random.PRNGKey(i))
+            tracecheck.assert_jit_cache(ops._p2m_frontend, size1,
+                                        recorder=rec,
+                                        what="ops._p2m_frontend")
+            frames2 = jax.random.uniform(jax.random.PRNGKey(9),
+                                         (4, 24, 24, 3))
             ops.p2m_frontend(frames2, wq, params["v_th"],
-                             jax.random.PRNGKey(i))
-        assert ops._p2m_frontend._cache_size() == size2
+                             jax.random.PRNGKey(0))
+            size2 = ops._p2m_frontend._cache_size()
+            assert size2 <= size1 + 1
+            for i in range(1, 3):
+                ops.p2m_frontend(frames2, wq, params["v_th"],
+                                 jax.random.PRNGKey(i))
+            tracecheck.assert_jit_cache(ops._p2m_frontend, size2,
+                                        recorder=rec,
+                                        what="ops._p2m_frontend")
 
     def test_fused_wrapper_cache_stable_across_theta_values(self):
         params = p2m.init_params(jax.random.PRNGKey(0), CFG)
@@ -139,10 +148,14 @@ class TestJitCacheStability:
         ops.p2m_frontend_fused(frames, wq, params["v_th"], jnp.asarray(0.7),
                                jax.random.PRNGKey(0))
         size1 = ops._p2m_frontend_fused._cache_size()
-        for i, th in enumerate((0.3, 0.5, 0.9)):
-            ops.p2m_frontend_fused(frames, wq, params["v_th"],
-                                   jnp.asarray(th), jax.random.PRNGKey(i))
-        assert ops._p2m_frontend_fused._cache_size() == size1
+        with tracecheck.capture() as rec:
+            for i, th in enumerate((0.3, 0.5, 0.9)):
+                ops.p2m_frontend_fused(frames, wq, params["v_th"],
+                                       jnp.asarray(th),
+                                       jax.random.PRNGKey(i))
+            tracecheck.assert_jit_cache(ops._p2m_frontend_fused, size1,
+                                        recorder=rec,
+                                        what="ops._p2m_frontend_fused")
 
 
 class TestFleetLookups:
@@ -190,7 +203,10 @@ class TestFleetLookups:
 
         call(2)
         size1 = ops._p2m_frontend._cache_size()
-        for i in range(1, 4):
-            call(2, seed=i)
-        assert ops._p2m_frontend._cache_size() == size1
+        with tracecheck.capture() as rec:
+            for i in range(1, 4):
+                call(2, seed=i)
+            tracecheck.assert_jit_cache(ops._p2m_frontend, size1,
+                                        recorder=rec,
+                                        what="ops._p2m_frontend")
         assert len(autotune._TABLE) == 1

@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.analysis import tracecheck
 from repro.launch.mesh import make_host_mesh
 from repro.lifetime import DriftConfig, SchedulePolicy
 from repro.models import vision
@@ -111,7 +112,8 @@ class TestSingleChipParity:
 class TestJitCacheDiscipline:
     """One compiled step serves every chip mix at a fixed (G, mb) shape."""
 
-    def test_chip_permutations_and_joins_share_one_trace(self, params):
+    def test_chip_permutations_and_joins_share_one_trace(self, params,
+                                                         trace_recorder):
         fe = FleetEngine(CFG, params, backend="pallas", seed=0,
                          chips_per_step=3)
         mixes = [(0, 1, 2), (2, 0, 1), (5, 3, 0), (7, 8, 9)]
@@ -120,12 +122,16 @@ class TestJitCacheDiscipline:
         # first serve compiles the exact step (seeding carries); steady
         # state runs the fused step — ONE entry each, regardless of which
         # chips (or how many registry rows) the steps gathered
-        assert fe._step._cache_size() == 1
-        assert fe._fused_step._cache_size() <= 1
+        tracecheck.assert_jit_cache(fe._step, 1, recorder=trace_recorder,
+                                    what="fe._step")
+        tracecheck.assert_jit_cache(fe._fused_step, 1, le=True,
+                                    recorder=trace_recorder,
+                                    what="fe._fused_step")
         assert fe.state.size == 8
 
     def test_sweeps_do_not_recompile_the_serving_step(self, params,
-                                                      cal_frames):
+                                                      cal_frames,
+                                                      trace_recorder):
         cfgv = vision.VisionConfig(arch="vgg_tiny", variation=VPROFILE)
         sweep = FleetSweepPolicy(policy=SchedulePolicy(period_frames=8),
                                  refresh_per_sweep=2)
@@ -135,10 +141,14 @@ class TestJitCacheDiscipline:
         for s in range(4):
             fe.serve([(0, _frames(20 + s)), (1, _frames(30 + s))])
         assert fe.state.recal_count.sum() > 0          # sweeps actually ran
-        assert fe._step._cache_size() == 1
-        assert fe._fused_step._cache_size() <= 1
+        tracecheck.assert_jit_cache(fe._step, 1, recorder=trace_recorder,
+                                    what="fe._step")
+        tracecheck.assert_jit_cache(fe._fused_step, 1, le=True,
+                                    recorder=trace_recorder,
+                                    what="fe._fused_step")
 
-    def test_fleet_growth_never_enters_the_trace(self, params):
+    def test_fleet_growth_never_enters_the_trace(self, params,
+                                                 trace_recorder):
         """Serving the same (G, mb) shape out of a 2-chip and a 40-chip
         registry hits the same executable (gathers happen outside jit)."""
         fe = FleetEngine(CFG, params, backend="pallas", seed=0,
@@ -147,7 +157,8 @@ class TestJitCacheDiscipline:
         for c in range(2, 40):
             fe.add_chip(c)
         fe.serve([(30, _frames(3)), (17, _frames(4))])
-        assert fe._step._cache_size() == 1
+        tracecheck.assert_jit_cache(fe._step, 1, recorder=trace_recorder,
+                                    what="fe._step")
 
 
 class TestRaggedFleets:

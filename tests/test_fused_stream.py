@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 
 from repro import frontend
+from repro.analysis import tracecheck
 from repro.core import p2m
 from repro.kernels import autotune, blocking, ops, ref
 from repro.kernels import p2m_conv as pk
@@ -213,8 +214,11 @@ class TestStreamDriftGuard:
         ])
         eng, _, _ = _vis_engine(microbatch=2, fused_stream=True,
                                 fused_theta_tol=0.05)
-        list(eng.stream([frames, frames]))
+        with tracecheck.capture() as rec:
+            list(eng.stream([frames, frames]))
         assert eng.fused_step_count >= 2
         assert eng.fused_fallback_count >= 1
-        assert eng._step._cache_size() == 1
-        assert eng._fused_step._cache_size() == 1
+        tracecheck.assert_jit_cache(eng._step, 1, recorder=rec,
+                                    what="eng._step")
+        tracecheck.assert_jit_cache(eng._fused_step, 1, recorder=rec,
+                                    what="eng._fused_step")

@@ -27,6 +27,7 @@ import pytest
 
 from repro import frontend
 from repro import lifetime as lt
+from repro.analysis import tracecheck
 from repro.core import p2m
 from repro.kernels import ops, ref
 from repro.kernels import p2m_conv as pk
@@ -341,9 +342,11 @@ class TestEngineLifetime:
         eng, frames = self._aging_engine(
             backend=backend,
             schedule=lt.SchedulePolicy(period_frames=4, cal_iters=4))
-        list(eng.stream([frames, frames, frames]))
+        with tracecheck.capture() as rec:
+            list(eng.stream([frames, frames, frames]))
         assert eng.lifetime.recal_count >= 1     # a refresh really happened
-        assert eng._step._cache_size() == 1
+        tracecheck.assert_jit_cache(eng._step, 1, recorder=rec,
+                                    what="eng._step")
 
     def test_periodic_schedule_fires_and_charges_energy(self):
         eng, frames = self._aging_engine(
