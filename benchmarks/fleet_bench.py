@@ -291,6 +291,8 @@ def main() -> None:
     if args.quick:
         sys.exit(quick_check())
     results = run(smoke=args.smoke)
+    from repro.obs.export import bench_meta
+    results["meta"] = bench_meta("fleet", smoke=args.smoke)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     print(f"wrote {args.out}")

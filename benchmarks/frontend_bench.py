@@ -272,6 +272,8 @@ def main() -> None:
     if args.quick:
         sys.exit(quick_check())
     results = run(smoke=args.smoke)
+    from repro.obs.export import bench_meta
+    results["meta"] = bench_meta("frontend", smoke=args.smoke)
     # persist the tuner search in autotune's own loadable schema so a
     # deployment can ship it (VisionEngine(tile_table=...) /
     # autotune.load_table) — the JSON block above is the human-readable

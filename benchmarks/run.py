@@ -5,11 +5,14 @@ paper's claims and §Roofline/§Perf for the dry-run-based performance tables.
 """
 from __future__ import annotations
 
+import json
 import sys
-import time
 
 
 def main() -> None:
+    from repro.obs import clock
+    from repro.obs.export import bench_meta
+
     from benchmarks import fleet_bench
     from benchmarks import lifetime_bench
     from benchmarks import paper_benchmarks as pb
@@ -27,10 +30,12 @@ def main() -> None:
         lifetime_bench.bench_rows,
         fleet_bench.bench_rows,
     ]
+    print(f"# meta: {json.dumps(bench_meta('paper_tables'), sort_keys=True)}",
+          file=sys.stderr)
     print("name,value,derived")
     failures = 0
     for bench in benches:
-        t0 = time.time()
+        t0 = clock.now()
         try:
             for name, value, derived in bench():
                 print(f"{name},{value:.6g},{derived}")
@@ -38,7 +43,7 @@ def main() -> None:
             failures += 1
             print(f"{bench.__name__},ERROR,{type(e).__name__}: {e}",
                   file=sys.stderr)
-        print(f"# {bench.__name__} took {time.time() - t0:.1f}s",
+        print(f"# {bench.__name__} took {clock.now() - t0:.1f}s",
               file=sys.stderr)
     if failures:
         raise SystemExit(1)

@@ -121,6 +121,8 @@ def main() -> None:
     if args.warnings_as_errors:
         warnings.filterwarnings("error", module=r"repro\.variation.*")
     results = run(smoke=args.smoke)
+    from repro.obs.export import bench_meta
+    results["meta"] = bench_meta("variation", smoke=args.smoke)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     print(f"wrote {args.out}")

@@ -17,8 +17,12 @@
 # dot/conv structure or matmul flop budget drifts, or if the vmapped
 # fleet step stops batching the kernel (census growing with the chip
 # axis). Wall clock stays informational — no flaky timing gates on shared
-# hosts. The examples smoke keeps the README entry points importable and
-# runnable end to end.
+# hosts. The obs smoke (python -m repro.obs smoke, DESIGN.md §12) drives
+# an obs-enabled stream + fleet serve, asserts the JSONL/exposition
+# exports are non-empty, and enforces the instrumentation overhead gates:
+# zero added device ops vs the stream.exact census budget and zero added
+# retraces. The examples smoke keeps the README entry points importable
+# and runnable end to end.
 # Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -35,6 +39,9 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/fleet_bench.py --smoke --warnings-as-errors \
     --out BENCH_fleet.json
+# obs smoke + overhead gates (non-empty exports, 0 added ops/retraces)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.obs smoke --out results
 # examples smoke: the documented entry points must run end to end
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/p2m_frontend.py

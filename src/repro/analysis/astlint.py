@@ -7,8 +7,12 @@ Each rule guards an invariant that was broken (or nearly broken) once:
                        bench; a drifted copy silently changes the device)
 ``vmap-needs-jit``     ``jax.vmap`` at a call site outside a jitted inner
                        re-traces per call (PR 6's ~10x fleet-step wall trap)
-``no-wallclock``       ``time.time`` in library code — non-monotonic under
-                       NTP; timings must use ``time.perf_counter``
+``no-wallclock``       the single-clock rule: ``time.time`` is banned in
+                       library code (non-monotonic under NTP), and
+                       ``time.perf_counter`` may be called ONLY by
+                       ``repro.obs.clock`` — everything else routes
+                       timestamps through ``repro.obs.clock.now()`` so
+                       timing semantics live in exactly one file
 ``no-host-rng``        ``numpy.random`` / ``PRNGKey(<literal>)`` in library
                        code — host RNG breaks reproducibility and a baked
                        seed hides the key-threading bug class of PR 4
@@ -34,7 +38,11 @@ CLI_ROOTS = (
     "repro.launch.train",       # python -m repro.launch.train (verify recipe)
     "repro.launch.serve",       # python -m repro.launch.serve
     "repro.analysis.__main__",  # python -m repro.analysis (scripts/lint.sh)
+    "repro.obs.__main__",       # python -m repro.obs (obs smoke, scripts/ci.sh)
 )
+
+# the ONE file allowed to call time.perf_counter (the single-clock rule)
+CLOCK_MODULE = "src/repro/obs/clock.py"
 
 RULES = ("physics-constants", "vmap-needs-jit", "no-wallclock",
          "no-host-rng", "frozen-config", "orphan-module")
@@ -100,6 +108,7 @@ class _FileLint:
         self.tree = ast.parse(source, filename=path)
         self.protected = protected_constants
         self.in_core = "/core/" in rel.replace(os.sep, "/")
+        self.is_clock = rel.replace(os.sep, "/") == CLOCK_MODULE
         self.violations: List[Violation] = []
         self.parents: Dict[ast.AST, ast.AST] = {}
         for node in ast.walk(self.tree):
@@ -137,10 +146,15 @@ class _FileLint:
                    "call site in jax.jit or move it under a @jax.jit inner")
 
     def _check_wallclock(self, node: ast.Attribute) -> None:
-        if _dotted(node) == "time.time":
+        d = _dotted(node)
+        if d == "time.time":
             self._flag("no-wallclock", node,
-                       "time.time() is not monotonic; use "
-                       "time.perf_counter() for timing")
+                       "time.time() is not monotonic; route timestamps "
+                       "through repro.obs.clock.now()")
+        elif d == "time.perf_counter" and not self.is_clock:
+            self._flag("no-wallclock", node,
+                       "only repro.obs.clock may call time.perf_counter() "
+                       "(single-clock rule); use repro.obs.clock.now()")
 
     def _check_host_rng(self, node: ast.AST) -> None:
         if isinstance(node, ast.Attribute):

@@ -34,8 +34,9 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import time
 from typing import Callable, Dict, Iterable, Optional, Tuple
+
+from repro.obs import clock
 
 TuneKey = Tuple[int, int, int]
 
@@ -179,20 +180,35 @@ def resolve_fleet_fused(chips_in_batch: int, n: int, k_eff: int, c_out: int,
 
 
 def save_table(path: str) -> None:
-    """Persist the in-process table as JSON ({"n,k,c": {...}})."""
+    """Persist the in-process table as JSON ({"n,k,c": {...}}).
+
+    A ``"_meta"`` entry (repro.obs.export.bench_meta) stamps the backend /
+    jax version the timings were measured on — a table tuned elsewhere is
+    still loadable, but the mismatch is visible in the file.
+    """
+    from repro.obs.export import bench_meta
+    table = {",".join(map(str, k)): v.to_json()
+             for k, v in sorted(_TABLE.items())}
+    table["_meta"] = bench_meta("autotune", entries=len(_TABLE))
     with open(path, "w") as f:
-        json.dump({",".join(map(str, k)): v.to_json()
-                   for k, v in sorted(_TABLE.items())}, f, indent=2)
+        json.dump(table, f, indent=2)
 
 
 def load_table(path: str) -> int:
-    """Merge a persisted table into the process; returns entries loaded."""
+    """Merge a persisted table into the process; returns entries loaded.
+
+    Keys starting with ``"_"`` (the ``"_meta"`` stamp) are skipped.
+    """
     with open(path) as f:
         raw = json.load(f)
+    n = 0
     for k, v in raw.items():
+        if k.startswith("_"):
+            continue
         key = tuple(int(x) for x in k.split(","))
         _TABLE[key] = TileChoice.from_json(v)  # type: ignore[index]
-    return len(raw)
+        n += 1
+    return n
 
 
 # ---------------------------------------------------------------------------
@@ -224,9 +240,9 @@ def _best_of(fn: Callable[[], None], repeats: int) -> float:
     fn()            # compile + warm
     best = float("inf")
     for _ in range(repeats):
-        t0 = time.perf_counter()
+        t0 = clock.now()
         fn()
-        best = min(best, time.perf_counter() - t0)
+        best = min(best, clock.now() - t0)
     return best
 
 

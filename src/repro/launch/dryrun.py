@@ -24,7 +24,6 @@ Usage:
 import argparse
 import dataclasses
 import json
-import time
 import traceback
 from typing import Any, Dict, Optional
 
@@ -40,6 +39,7 @@ from repro.launch.specs import (abstract_cache_sharded,
                                 abstract_opt_state,
                                 abstract_params_sharded, input_specs)
 from repro.models import lm
+from repro.obs import clock
 from repro.serving.engine import make_decode_step, make_prefill_step
 from repro.train.loop import make_train_step
 
@@ -251,7 +251,7 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
             rules = sharding.ShardingRules.make(merged)
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = 512 if multi_pod else 256
-    t0 = time.perf_counter()
+    t0 = clock.now()
     record: Dict[str, Any] = {
         "arch": arch_name, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16", "tag": tag,
@@ -260,9 +260,9 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
         with mesh:
             fn, args = build_cell(cfg, shape, mesh, rules, opt_cfg)
             lowered = fn.lower(*args)
-            t_lower = time.perf_counter() - t0
+            t_lower = clock.now() - t0
             compiled = lowered.compile()
-            t_compile = time.perf_counter() - t0 - t_lower
+            t_compile = clock.now() - t0 - t_lower
             mem = compiled.memory_analysis()
             cost = cost_analysis_dict(compiled)
             coll = hlo_analysis.collective_stats(compiled.as_text())

@@ -6,12 +6,12 @@
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro.obs import clock
 from repro.configs.reduced import reduced
 from repro.models import lm
 from repro.serving import ServingEngine
@@ -38,11 +38,11 @@ def main() -> None:
     if cfg.is_encdec:
         enc = jax.random.normal(jax.random.PRNGKey(2),
                                 (args.batch, cfg.encoder_seq, cfg.d_model))
-    t0 = time.perf_counter()
+    t0 = clock.now()
     out = engine.generate(prompts, args.new_tokens, encoder_embeddings=enc,
                           rng=jax.random.PRNGKey(3)
                           if args.temperature > 0 else None)
-    dt = time.perf_counter() - t0
+    dt = clock.now() - t0
     print(f"generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.new_tokens / dt:.1f} tok/s)")
     print(jnp.asarray(out)[:, :12])

@@ -19,11 +19,11 @@ from __future__ import annotations
 
 import argparse
 import signal
-import time
 
 import jax
 
 from repro import configs, sharding
+from repro.obs import clock
 from repro.configs.base import OptimizerConfig, RunConfig
 from repro.configs.reduced import reduced
 from repro.data import TokenStream
@@ -52,11 +52,11 @@ def train_vision(args) -> None:
     params = vision.init_params(jax.random.PRNGKey(0), cfg)
     stream = ImageStream(hw=32, num_classes=10, global_batch=args.batch)
 
-    t0 = time.perf_counter()
+    t0 = clock.now()
     params = vision_loop.fit(params, cfg, stream, args.steps, lr=args.lr,
                              key=jax.random.PRNGKey(1),
                              log_every=max(args.steps // 10, 1))
-    dt = time.perf_counter() - t0
+    dt = clock.now() - t0
     print(f"{args.steps} steps in {dt:.1f}s "
           f"({1e3 * dt / max(args.steps, 1):.0f} ms/step)")
 
@@ -118,9 +118,9 @@ def main() -> None:
         lambda: lm.init_params(jax.random.PRNGKey(run.seed), cfg))
     if start:
         print(f"resumed from checkpoint at step {start}")
-    t0 = time.perf_counter()
+    t0 = clock.now()
     params, opt, step = trainer.fit(params, opt, start, args.steps)
-    dt = time.perf_counter() - t0
+    dt = clock.now() - t0
     for h in trainer.history:
         print({k: round(v, 4) for k, v in h.items()})
     steps_done = max(step - start, 1)

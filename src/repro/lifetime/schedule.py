@@ -95,7 +95,9 @@ class RecalibrationScheduler:
     def __init__(self, policy: SchedulePolicy, pcfg: p2m.P2MConfig,
                  cal_frames: jax.Array, params_p2m: dict, *,
                  frame_spec: Optional[energy.FrameSpec] = None,
-                 consts: energy.EnergyConstants = energy.DEFAULT_ENERGY):
+                 consts: energy.EnergyConstants = energy.DEFAULT_ENERGY,
+                 obs=None):
+        self._obs = obs    # optional repro.obs.Obs: tester-solve spans
         if not policy.enabled:
             raise ValueError("SchedulePolicy needs period_frames and/or "
                              "rate_err_threshold set")
@@ -179,7 +181,11 @@ class RecalibrationScheduler:
         Deterministic (the tester measures expected rates — no RNG), so a
         refresh can never perturb the engine's key-folding sequence.
         """
-        trim = self._solve(chip)
+        if self._obs is not None:
+            with self._obs.span("recal_solve", iters=self.policy.cal_iters):
+                trim = jax.block_until_ready(self._solve(chip))
+        else:
+            trim = self._solve(chip)
         # the post-refresh rates are new normal: re-baseline the monitor
         self._ema = None
         self._baseline = None
@@ -196,6 +202,10 @@ class RecalibrationScheduler:
         a fleet engine keeps its own per-chip monitors and re-baselines
         exactly the chips it refreshed (serving/fleet.py).
         """
+        if self._obs is not None:
+            with self._obs.span("recal_solve_fleet",
+                                iters=self.policy.cal_iters):
+                return jax.block_until_ready(self._solve_fleet(chips))
         return self._solve_fleet(chips)
 
     def rate_error(self, chip: ChipMaps, trim: Optional[jax.Array]) -> float:

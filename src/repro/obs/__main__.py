@@ -1,0 +1,218 @@
+"""CLI for the observability layer: ``python -m repro.obs``.
+
+Three subcommands:
+
+    python -m repro.obs summary FILE.jsonl   # span/event/metric digest
+    python -m repro.obs smoke [--out DIR]    # end-to-end obs smoke + gates
+    python -m repro.obs chrome IN.jsonl OUT.json  # chrome://tracing wrap
+
+``smoke`` is what ``scripts/ci.sh`` runs: it drives a short obs-enabled
+``VisionEngine.stream`` and ``FleetEngine.serve``, asserts the exports are
+non-empty (JSONL records, Prometheus exposition, latency quantiles), and
+then enforces the two overhead gates of DESIGN.md §12:
+
+* instrumentation must add ZERO device ops — the jaxpr census of the
+  obs-enabled ``VisionEngine._step`` must match the ``stream.exact``
+  budget in ``ANALYSIS_BUDGETS.json`` (conv / dot_general / eqn_count);
+* instrumentation must add ZERO retraces — a two-round same-shape stream
+  under ``analysis.tracecheck`` must compile ``_step`` exactly once.
+
+Exit code 0 only if every assertion holds.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional
+
+
+def _repo_root() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+# -- summary ------------------------------------------------------------------
+
+def _summarize(records: List[Dict[str, Any]]) -> str:
+    spans: Dict[str, List[float]] = {}
+    events: Dict[str, int] = {}
+    metrics: List[Dict[str, Any]] = []
+    meta: Optional[Dict[str, Any]] = None
+    for r in records:
+        ph = r.get("ph")
+        if ph == "X":
+            spans.setdefault(r["name"], []).append(r.get("dur", 0.0))
+        elif ph == "i":
+            events[r["name"]] = events.get(r["name"], 0) + 1
+        elif ph == "C":
+            metrics.append(r)
+        elif ph == "M" and meta is None:
+            meta = r.get("meta")
+    lines: List[str] = []
+    if meta is not None:
+        lines.append(f"meta: {json.dumps(meta, sort_keys=True)}")
+    lines.append(f"{len(records)} record(s): "
+                 f"{sum(len(v) for v in spans.values())} span(s), "
+                 f"{sum(events.values())} event(s), "
+                 f"{len(metrics)} metric(s)")
+    for name in sorted(spans):
+        durs = spans[name]
+        lines.append(f"  span  {name:<28} n={len(durs):<5} "
+                     f"total={sum(durs) / 1e3:.3f}ms")
+    for name in sorted(events):
+        lines.append(f"  event {name:<28} n={events[name]}")
+    for m in sorted(metrics, key=lambda r: r["name"]):
+        if m.get("type") == "histogram":
+            lines.append(f"  hist  {m['name']:<28} count={m['count']:<6} "
+                         f"p50={m['p50']:.4g} p95={m['p95']:.4g} "
+                         f"p99={m['p99']:.4g}")
+        else:
+            lines.append(f"  {m.get('type', 'metric'):<5} {m['name']:<28} "
+                         f"value={m['value']:.6g}")
+    return "\n".join(lines)
+
+
+def cmd_summary(args: argparse.Namespace) -> int:
+    from repro.obs import export
+    records = export.read_jsonl(args.file)
+    if not records:
+        print(f"FAIL: {args.file} holds no records", file=sys.stderr)
+        return 1
+    print(_summarize(records))
+    return 0
+
+
+# -- chrome -------------------------------------------------------------------
+
+def cmd_chrome(args: argparse.Namespace) -> int:
+    """Wrap obs JSONL into the ``chrome://tracing`` object format."""
+    from repro.obs import export
+    records = export.read_jsonl(args.infile)
+    trace = [r for r in records if r.get("ph") in ("X", "i")]
+    with open(args.outfile, "w") as fh:
+        json.dump({"traceEvents": trace, "displayTimeUnit": "ms"}, fh)
+    print(f"wrote {len(trace)} trace event(s) to {args.outfile}")
+    return 0
+
+
+# -- smoke + overhead gates ---------------------------------------------------
+
+def _fail(msg: str) -> None:
+    print(f"FAIL: {msg}", file=sys.stderr)
+
+
+def cmd_smoke(args: argparse.Namespace) -> int:
+    import jax
+
+    import repro.obs as obs_mod
+    from repro.analysis import census, tracecheck
+    from repro.models import vision
+    from repro.serving import FleetEngine
+    from repro.serving.vision import VisionEngine
+
+    failed = False
+    out_dir = args.out or os.path.join(_repo_root(), "results")
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfg = vision.VisionConfig(name="obs-smoke", arch="vgg_tiny",
+                              num_classes=10)
+    params = vision.init_params(jax.random.PRNGKey(0), cfg)
+    frames = jax.random.uniform(jax.random.PRNGKey(1),
+                                (census.STREAM_BATCH, 32, 32, 3))
+
+    # 1. obs-enabled async stream, two same-shape rounds under the retrace
+    #    monitor: instrumentation must not add a single recompile.
+    obs = obs_mod.Obs()
+    eng = VisionEngine(cfg, params, backend="pallas", seed=0, obs=obs)
+    with tracecheck.capture() as rec:
+        outs = list(eng.stream([frames, frames]))
+    n_traces = len(rec.traces_of(eng._step))
+    if n_traces != 1:
+        _fail(f"retrace gate: VisionEngine._step traced {n_traces}x "
+              "across an obs-enabled two-round stream (expected 1)")
+        failed = True
+    if not (outs and all("labels" in o for o in outs)):
+        _fail("obs-enabled stream produced no classifications")
+        failed = True
+
+    # 2. fleet smoke: join/serve/leave must land as structured events.
+    fe = FleetEngine(cfg, params, backend="pallas", seed=0, obs=obs)
+    fe.add_chip(0)
+    fe.add_chip(1)
+    fe.serve([(0, frames), (1, frames)])
+    fe.remove_chip(1)
+
+    # 3. exports must be non-empty and carry latency quantiles.
+    jsonl_path = os.path.join(out_dir, "obs_smoke.jsonl")
+    n_records = obs.export_jsonl(
+        jsonl_path, meta=obs_mod.bench_meta("obs_smoke"))
+    summary = obs.summary()
+    expo = obs.exposition()
+    if n_records < 4:
+        _fail(f"JSONL export held only {n_records} record(s)")
+        failed = True
+    for name in ("stream", "microbatch"):
+        if not summary.get("spans", {}).get(name):
+            _fail(f"no {name!r} spans recorded")
+            failed = True
+    for name in ("fleet_join", "fleet_leave"):
+        if not summary.get("events", {}).get(name):
+            _fail(f"no {name!r} events recorded")
+            failed = True
+    hist = summary["metrics"].get("serving_microbatch_wall_ms", {})
+    if not hist.get("count") or hist.get("p50") is None:
+        _fail("serving_microbatch_wall_ms histogram empty")
+        failed = True
+    if "serving_frames_total" not in expo or "quantile=" not in expo:
+        _fail("Prometheus exposition incomplete")
+        failed = True
+
+    # 4. zero-op gate: the obs-enabled step's jaxpr census must equal the
+    #    pinned stream.exact budget — instrumentation adds no device ops.
+    budgets_path = os.path.join(_repo_root(), census.BUDGETS_BASENAME)
+    with open(budgets_path) as fh:
+        budget = json.load(fh)["census"]["stream.exact"]["jaxpr"]
+    got = census.jaxpr_census(eng._step, eng.params, frames,
+                              jax.random.PRNGKey(2))
+    for field in ("conv", "dot_general", "eqn_count", "host_callback"):
+        if got[field] != budget[field]:
+            _fail(f"op-overhead gate: stream.exact jaxpr {field} = "
+                  f"{got[field]} with obs enabled, budget pins "
+                  f"{budget[field]}")
+            failed = True
+
+    print(_summarize(obs_mod.export.read_jsonl(jsonl_path)))
+    print(f"smoke: {n_records} JSONL record(s) -> {jsonl_path}, "
+          f"{len(expo.splitlines())} exposition line(s), "
+          f"{'FAIL' if failed else 'ok'}")
+    return 1 if failed else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    p = sub.add_parser("summary", help="digest an obs JSONL export")
+    p.add_argument("file")
+    p.set_defaults(fn=cmd_summary)
+    p = sub.add_parser("smoke",
+                       help="end-to-end obs smoke + overhead gates (CI)")
+    p.add_argument("--out", default=None,
+                   help="output dir for obs_smoke.jsonl (default: results/)")
+    p.set_defaults(fn=cmd_smoke)
+    p = sub.add_parser("chrome",
+                       help="wrap obs JSONL for chrome://tracing")
+    p.add_argument("infile")
+    p.add_argument("outfile")
+    p.set_defaults(fn=cmd_chrome)
+    args = ap.parse_args(argv)
+    try:
+        return args.fn(args)
+    except BrokenPipeError:     # e.g. `... summary f.jsonl | head`
+        return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

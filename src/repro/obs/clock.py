@@ -1,0 +1,153 @@
+"""Single-sourced wall clock + deferred readiness probes (DESIGN.md §12).
+
+Every wall-clock timestamp in ``src/repro`` flows through :func:`now` — the
+*single-clock rule*, enforced by ``analysis/astlint.py`` (``no-wallclock``):
+``time.perf_counter`` is banned everywhere else so that timing semantics
+(monotonic, not subject to NTP steps) and any future clock swap (e.g. a
+simulated clock for deterministic latency tests) live in exactly one file.
+
+The second half of this module is what lets serving timing move *off* the
+hot path. The honest-but-blocking pattern::
+
+    t0 = perf_counter(); out = jax.block_until_ready(step(...)); wall = ...
+
+forfeits async dispatch: the host sits in ``block_until_ready`` while it
+could be dispatching the next microbatch. :class:`WallProbe` splits the
+measurement into a dispatch-side timestamp plus a *deferred* readiness
+check on one output array (the probe token): the host keeps dispatching,
+polls completed probes non-blockingly between dispatches, and performs a
+single blocking drain at a batch boundary — at which point every recorded
+latency is exactly as honest as the blocking version (dispatch start →
+device results ready), but the device pipeline stayed full in between.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+
+
+def now() -> float:
+    """Monotonic wall-clock seconds. The ONLY sanctioned call site of
+    ``time.perf_counter`` in ``src/repro`` (single-clock rule)."""
+    return time.perf_counter()
+
+
+class WallProbe:
+    """Dispatch timestamp + deferred readiness of one dispatched step.
+
+    ``token`` is any output ``jax.Array`` (or pytree of them) of the
+    dispatched computation: when the token is ready the whole step's
+    outputs are on-device and the wall interval [t0, ready] is an honest
+    end-to-end latency. The probe never blocks unless :meth:`wait` is
+    called; :meth:`poll` uses ``jax.Array.is_ready()`` which is a
+    non-blocking host-side check. Donation-safe: the probe holds the
+    *output* arrays, which jit never donates away.
+    """
+
+    __slots__ = ("t0", "token", "tags", "_latency")
+
+    def __init__(self, token: Any, t0: Optional[float] = None,
+                 **tags: Any):
+        self.t0 = now() if t0 is None else t0
+        self.token = token
+        self.tags = tags
+        self._latency: Optional[float] = None
+
+    @classmethod
+    def completed(cls, t0: float, latency: float, **tags: Any) -> "WallProbe":
+        """An already-measured probe (a synchronous step that still wants
+        to participate in a batch's ``span_bounds``)."""
+        p = cls(None, t0=t0, **tags)
+        p._latency = float(latency)
+        return p
+
+    # -- readiness ----------------------------------------------------------
+    def _ready(self) -> bool:
+        for leaf in jax.tree_util.tree_leaves(self.token):
+            if hasattr(leaf, "is_ready") and not leaf.is_ready():
+                return False
+        return True
+
+    def poll(self) -> bool:
+        """Non-blocking: True (and latency latched) iff the step finished."""
+        if self._latency is not None:
+            return True
+        if not self._ready():
+            return False
+        self._latency = now() - self.t0
+        self.token = None           # release output refs once measured
+        return True
+
+    def wait(self) -> float:
+        """Block until the step finishes; returns latency in seconds.
+
+        Blocks per-leaf via the array method (not ``jax.block_until_ready``)
+        so tests can assert the serving hot path never reaches the
+        module-level sync between microbatches."""
+        if self._latency is None:
+            for leaf in jax.tree_util.tree_leaves(self.token):
+                if hasattr(leaf, "block_until_ready"):
+                    leaf.block_until_ready()
+            self._latency = now() - self.t0
+            self.token = None
+        return self._latency
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Seconds from dispatch to readiness; None until measured."""
+        return self._latency
+
+
+class ProbeSet:
+    """The in-flight probes of one streaming session.
+
+    Typical engine loop::
+
+        done = probes.poll()        # between dispatches: non-blocking
+        ...
+        probes.add(WallProbe(out["labels"], t0=t0, frames=b))
+        ...
+        done = probes.drain()       # batch boundary: one blocking sync
+
+    ``drain`` is the only point that blocks, and it blocks once for the
+    whole pending set (readiness of the last-dispatched step implies the
+    earlier ones on a single in-order stream, but we measure each probe's
+    own latency, so out-of-order backends stay correct too).
+    """
+
+    def __init__(self) -> None:
+        self._pending: List[WallProbe] = []
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def add(self, probe: WallProbe) -> WallProbe:
+        self._pending.append(probe)
+        return probe
+
+    def poll(self) -> List[WallProbe]:
+        """Harvest every probe whose step already finished (non-blocking)."""
+        done = [p for p in self._pending if p.poll()]
+        if done:
+            self._pending = [p for p in self._pending if p.latency is None]
+        return done
+
+    def drain(self) -> List[WallProbe]:
+        """Block until every pending probe finishes; returns them all."""
+        done, self._pending = self._pending, []
+        for p in done:
+            p.wait()
+        return done
+
+
+def span_bounds(probes: Sequence[WallProbe]) -> Tuple[float, float]:
+    """(first dispatch t0, last measured ready time) over drained probes.
+
+    The difference is the honest wall of the whole batch: from the first
+    dispatch to the moment the final result was on-device.
+    """
+    t0 = min(p.t0 for p in probes)
+    t1 = max(p.t0 + (p.latency or 0.0) for p in probes)
+    return t0, t1

@@ -54,10 +54,11 @@ cfg/params/seed) resumes every stream bit-identically (asserted in tests).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
-import time
-from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+from typing import (ContextManager, Dict, Iterable, Iterator, List, Optional,
+                    Sequence, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +68,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import sharding
 from repro.core import energy, hoyer, p2m
 from repro.models import vision
+from repro.obs import clock
 from repro.serving.vision import _merge_outputs
 from repro.variation import chip as chip_mod
 from repro.variation.calibrate import solve_trim, target_rates
@@ -146,12 +148,18 @@ class FleetEngine:
                  fused_stream: Optional[bool] = None,
                  fused_theta_tol: float = 0.02,
                  fused_theta_ema: float = 0.9,
-                 tile_table: Optional[str] = None):
+                 tile_table: Optional[str] = None,
+                 obs=None, sync_timing: bool = False):
         self.cfg = cfg
         self.backend = backend or cfg.frontend_backend
         self.mesh = mesh
         self.rules = rules or sharding.ShardingRules.make()
         self.microbatch = microbatch
+        # telemetry (DESIGN.md §12) — same contract as VisionEngine:
+        # obs=None costs one `is None` check per hook; sync_timing=True
+        # restores the blocking per-step honest walls
+        self._obs = obs
+        self._sync_timing = bool(sync_timing)
         self.chips_per_step = int(chips_per_step)
         if self.chips_per_step < 1:
             raise ValueError("chips_per_step must be >= 1")
@@ -241,7 +249,7 @@ class FleetEngine:
                                  "(the tester re-exposes them per refresh)")
             self._scheduler = lt.RecalibrationScheduler(
                 sweep.policy, pcfg, calibration_frames, self.params["p2m"],
-                frame_spec=self._frame_spec())
+                frame_spec=self._frame_spec(), obs=self._obs)
 
         self.state = self._empty_state()
 
@@ -331,6 +339,10 @@ class FleetEngine:
             [st.baseline_valid, np.zeros((1,), bool)])
         st.rate_err = np.concatenate(
             [st.rate_err, np.zeros((1,), np.float64)])
+        self._event("fleet_join", chip_id=chip_id, fleet_size=st.size,
+                    calibrated=bool(do_cal))
+        if self._obs is not None:
+            self._obs.gauge("fleet_size").set(st.size)
         return st.size - 1
 
     def remove_chip(self, chip_id: int) -> None:
@@ -354,6 +366,10 @@ class FleetEngine:
             a = getattr(st, name)
             setattr(st, name, np.delete(a, i, axis=0))
         self._theta_carry.pop(int(chip_id), None)
+        self._event("fleet_leave", chip_id=int(chip_id),
+                    fleet_size=st.size)
+        if self._obs is not None:
+            self._obs.gauge("fleet_size").set(st.size)
 
     def _ensure_chip(self, chip_id: int) -> int:
         """Row of ``chip_id``, auto-registering unknown ids (a chip joining
@@ -373,6 +389,21 @@ class FleetEngine:
             h_out=max(conv // 2, 1), w_out=max(conv // 2, 1),
             c_out=pcfg.out_channels, kernel=pcfg.kernel_size,
             stride=pcfg.stride, n_mtj=pcfg.mtj.n_redundant)
+
+    def _span(self, name: str, **args) -> ContextManager[None]:
+        return (self._obs.span(name, **args) if self._obs is not None
+                else contextlib.nullcontext())
+
+    def _event(self, name: str, **args) -> None:
+        if self._obs is not None:
+            self._obs.event(name, **args)
+
+    def _record_step(self, wall_s: float, n_frames: int) -> None:
+        if self._obs is not None:
+            self._obs.histogram("fleet_step_wall_ms").record(wall_s * 1e3)
+            self._obs.counter("serving_frames_total").inc(n_frames)
+            self._obs.counter("fleet_steps_total").inc()
+            self._obs.gauge("fleet_size").set(self.state.size)
 
     # --- the vmapped fleet step -------------------------------------------
 
@@ -512,13 +543,21 @@ class FleetEngine:
 
     # --- stepping ----------------------------------------------------------
 
-    def _run_step(self, group: List[_WorkItem],
-                  stream: bool = True) -> List[Dict]:
-        """Execute one packed step; returns one output dict per item.
+    def _run_step(self, group: List[_WorkItem], stream: bool = True,
+                  defer: bool = False
+                  ) -> Tuple[List[Dict], Optional[clock.WallProbe]]:
+        """Execute one packed step; returns one output dict per item plus
+        the step's readiness probe (None on synchronized paths).
 
         ``stream=False`` (a bare ``classify``) always runs the exact path,
         emits no streaming telemetry keys and never touches theta carries —
-        mirroring the tri-state ``fused=None`` of ``VisionEngine``."""
+        mirroring the tri-state ``fused=None`` of ``VisionEngine``.
+
+        ``defer=True`` and the plain exact path dispatch WITHOUT blocking:
+        the caller drains the probe at the request-batch boundary and
+        patches the per-item walls (``_patch_walls``). Fused steps read
+        fresh thetas on the host, so they are inherently synchronized and
+        always return ``probe=None`` with honest walls."""
         g = len(group)
         slots = np.array([it.slot for it in group])
         ages = np.array([it.age for it in group], np.float64)
@@ -529,13 +568,19 @@ class FleetEngine:
         fused = self._fused_wanted(g, b, h, w) if stream else None
         carries = [self._theta_carry.get(it.chip_id) for it in group]
         run_fused = bool(fused) and all(c is not None for c in carries)
+        total_frames = g * b
 
-        t0 = time.perf_counter()
+        probe = None
+        t0 = clock.now()
         if run_fused:
             theta = jnp.asarray(carries, jnp.float32)
-            out = jax.block_until_ready(self._fused_step(
-                self.params, chips, trims, frames, keys, theta))
+            with self._span("step", chips=g, frames=total_frames,
+                            path="fused"):
+                out = jax.block_until_ready(self._fused_step(
+                    self.params, chips, trims, frames, keys, theta))
             self.fused_step_count += 1
+            if self._obs is not None:
+                self._obs.counter("serving_fused_steps_total").inc()
             fresh = np.asarray(out["theta"], np.float64)
             drifts = np.abs(fresh - np.asarray(carries)) / np.maximum(
                 np.abs(np.asarray(carries)), 1e-9)
@@ -543,6 +588,11 @@ class FleetEngine:
                 # some chip's carried threshold went stale: re-serve the
                 # WHOLE step from the exact pipeline (same keys — the rng
                 # sequence is identical either way) and re-seed every carry
+                self._event("drift_guard_fallback",
+                            chip_ids=[it.chip_id for it in group],
+                            drift=float(np.max(drifts)))
+                if self._obs is not None:
+                    self._obs.counter("serving_fused_fallback_total").inc()
                 out = jax.block_until_ready(self._step(
                     self.params, chips, trims, frames, keys))
                 self.fused_fallback_count += 1
@@ -556,21 +606,33 @@ class FleetEngine:
                         e * carries[i] + (1.0 - e) * float(fresh[i]))
                 ran_fused = True
             drift_vals = [float(d) for d in drifts]
+            wall = clock.now() - t0
+            self._record_step(wall, total_frames)
         else:
-            out = jax.block_until_ready(self._step(
-                self.params, chips, trims, frames, keys))
+            sync = self._sync_timing or not defer or bool(fused)
+            with self._span("step", chips=g, frames=total_frames,
+                            path="exact"):
+                out = self._step(self.params, chips, trims, frames, keys)
+                if sync:
+                    out = jax.block_until_ready(out)
             if fused:
                 # the step WANTED fused but some chip had no carry yet (its
                 # stream's first microbatch): the exact run seeds them all —
-                # mirroring VisionEngine's first-microbatch seeding
+                # mirroring VisionEngine's first-microbatch seeding. The
+                # host theta reads synchronize this path regardless of sync.
                 for i, it in enumerate(group):
                     self._theta_carry[it.chip_id] = float(out["theta"][i])
             ran_fused = False
             drift_vals = [0.0] * g
-        wall = time.perf_counter() - t0
+            wall = clock.now() - t0
+            if sync:
+                self._record_step(wall, total_frames)
+            else:
+                # async: wall below is dispatch-side; the drain patches it
+                probe = clock.WallProbe(out["labels"], t0=t0,
+                                        frames=total_frames, chips=g)
 
         outs: List[Dict] = []
-        total_frames = g * b
         for i, it in enumerate(group):
             o = {k: v[i] for k, v in out.items()}
             if fused is not None:
@@ -585,7 +647,7 @@ class FleetEngine:
             o["sensor_latency_us"] = self._sensor_latency_us
             o["sensor_fps"] = self._sensor_fps
             outs.append(o)
-        return outs
+        return outs, probe
 
     def _commit(self, it: _WorkItem, out: Dict) -> Dict:
         """Advance the chip's host state past one served item and attach
@@ -645,9 +707,33 @@ class FleetEngine:
         if not requests:
             return []
         items = self._plan(requests)
+        defer = not self._sync_timing
+        steps: List[Tuple[List[_WorkItem], List[Dict],
+                          Optional[clock.WallProbe]]] = []
+        with self._span("serve", requests=len(requests)):
+            # dispatch every packed step without blocking (async mode) ...
+            for group in self._group(items):
+                outs, probe = self._run_step(group, defer=defer)
+                steps.append((group, outs, probe))
+            # ... then drain once: the only blocking point of the batch.
+            # Each probed step's honest wall overwrites its dispatch-side
+            # per-item shares before commit/merge.
+            for group, outs, probe in steps:
+                if probe is None:
+                    continue
+                wall = probe.wait()
+                self._record_step(wall, probe.tags["frames"])
+                if self._obs is not None:
+                    self._obs.complete_span("step_ready", probe.t0,
+                                            probe.t0 + wall, **probe.tags)
+                total = probe.tags["frames"]
+                for it, o in zip(group, outs):
+                    share = it.frames.shape[0] / total
+                    o["wall_ms"] = wall * 1e3 * share
+                    o["throughput_fps"] = total / wall
         per_req: Dict[int, List[Tuple[_WorkItem, Dict]]] = {}
-        for group in self._group(items):
-            outs = self._run_step(group)
+        for group, outs, _ in steps:
+            # commits run in item (plan) order — groups preserve it
             for it, o in zip(group, outs):
                 o = self._commit(it, o)
                 per_req.setdefault(it.req, []).append((it, o))
@@ -684,7 +770,7 @@ class FleetEngine:
             advance = False
         it = _WorkItem(0, slot, int(chip_id), frames, key,
                        int(st.age_frames[slot]), advance=advance)
-        (out,) = self._run_step([it], stream=False)
+        (out,), _ = self._run_step([it], stream=False)
         return self._commit(it, out)
 
     def stream(self, request_batches: Iterable[Sequence[Tuple[int,
@@ -754,8 +840,10 @@ class FleetEngine:
             chips = self._evolve(
                 chips, jax.tree.map(lambda a: a[idx], st.maps),
                 jnp.asarray(st.age_frames[padded], jnp.float32))
-        trims = self._scheduler.recalibrate_fleet(chips)
-        st.trim = st.trim.at[jnp.asarray(chosen, jnp.int32)].set(trims[:k])
+        with self._span("sweep", refreshing=int(k)):
+            trims = self._scheduler.recalibrate_fleet(chips)
+            st.trim = st.trim.at[jnp.asarray(chosen,
+                                             jnp.int32)].set(trims[:k])
         for s in chosen:
             st.recal_count[s] += 1
             st.last_recal_frame[s] = st.age_frames[s]
@@ -770,6 +858,12 @@ class FleetEngine:
         self.sweep_count += 1
         report["refreshed"] = [int(st.chip_ids[s]) for s in chosen]
         report["energy_credit_pj"] = float(self._energy_credit_pj)
+        self._event("fleet_sweep", eligible=report["eligible"],
+                    refreshed=report["refreshed"],
+                    energy_credit_pj=report["energy_credit_pj"])
+        if self._obs is not None:
+            self._obs.counter("fleet_sweeps_total").inc()
+            self._obs.counter("fleet_chips_refreshed_total").inc(k)
         return report
 
     # --- warm restarts -------------------------------------------------------
@@ -814,6 +908,8 @@ class FleetEngine:
                             for cid, v in self._theta_carry.items()},
         }
         m.save(step, {"fleet": self._ckpt_tree()}, extra=extra)
+        self._event("checkpoint_save", step=int(step),
+                    fleet_size=self.state.size)
         return step
 
     def load(self, directory: str, step: Optional[int] = None) -> int:
@@ -855,4 +951,6 @@ class FleetEngine:
         self._energy_credit_pj = float(extra["energy_credit_pj"])
         self._theta_carry = {int(k): float(v)
                              for k, v in extra["theta_carry"].items()}
+        self._event("checkpoint_load", step=int(step),
+                    fleet_size=self.state.size)
         return step

@@ -33,6 +33,20 @@ accounting) and serving telemetry: measured ``wall_ms`` /
 at this engine's frame geometry) — so a deployment can monitor both the
 compute link and the physical sensor budget, not just the predictions.
 
+Timing is OFF the hot path (DESIGN.md §12): ``stream()`` dispatches
+microbatches without blocking and latches each step's honest end-to-end
+latency through a deferred readiness probe (``repro.obs.clock.WallProbe``),
+draining once per incoming batch — the merged ``wall_ms`` is the honest
+first-dispatch-to-last-ready wall, while the device pipeline stays full
+between microbatches. ``sync_timing=True`` restores the old
+block-per-microbatch behavior bit-exactly (benches that want per-step
+device-synchronized walls). Pass ``obs=`` (a ``repro.obs.Obs``) and the
+engine additionally records latency histograms (p50/p95/p99), frame
+counters, spans (``stream``/``microbatch``/``kernel_dispatch``) and
+structured events (recalibration, drift-guard fallback) — with ``obs=None``
+(the default) every instrument call is behind one ``is None`` check:
+outputs are bit-identical and jit caches/census provably unchanged.
+
 Per-chip realism: when ``cfg.variation`` names a sampled chip, pass the
 chip's ``calibration=`` artifact (variation/calibrate.py) and the engine
 programs its trim into the frontend params at construction — each engine
@@ -54,9 +68,9 @@ including with a scheduler armed (nothing drifts, nothing fires).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
-import time
-from typing import Dict, Iterable, Iterator, List, Optional
+from typing import ContextManager, Dict, Iterable, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +79,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import sharding
 from repro.core import energy
 from repro.models import vision
+from repro.obs import clock
 from repro.variation import chip as chip_mod
 
 # logical axes of a (B, H, W, C) frame batch: shard batch, replicate pixels
@@ -85,7 +100,8 @@ class VisionEngine:
                  fused_stream: Optional[bool] = None,
                  fused_theta_tol: float = 0.02,
                  fused_theta_ema: float = 0.9,
-                 tile_table: Optional[str] = None):
+                 tile_table: Optional[str] = None,
+                 obs=None, sync_timing: bool = False):
         self.cfg = cfg
         self.backend = backend or cfg.frontend_backend
         self.mesh = mesh
@@ -93,6 +109,14 @@ class VisionEngine:
         self.microbatch = microbatch
         self._key = jax.random.PRNGKey(seed)
         self._frame_count = 0
+        # telemetry (DESIGN.md §12): obs is a repro.obs.Obs or None; every
+        # instrument call sits behind one `is None` check so the disabled
+        # path has zero cost. sync_timing=True restores the pre-obs
+        # block-per-microbatch honest walls (async probes otherwise).
+        self._obs = obs
+        self._sync_timing = bool(sync_timing)
+        self._pending = clock.ProbeSet()
+        self._batch_probes: List[clock.WallProbe] = []
         if fused_stream and self.backend != "pallas":
             raise ValueError("fused_stream=True requires the 'pallas' "
                              f"backend (got {self.backend!r})")
@@ -147,6 +171,47 @@ class VisionEngine:
             c_out=pcfg.out_channels, kernel=pcfg.kernel_size,
             stride=pcfg.stride, n_mtj=pcfg.mtj.n_redundant)
 
+    # --- telemetry plumbing (DESIGN.md §12) ---------------------------------
+
+    def _span(self, name: str, **args) -> ContextManager[None]:
+        return (self._obs.span(name, **args) if self._obs is not None
+                else contextlib.nullcontext())
+
+    def _event(self, name: str, **args) -> None:
+        if self._obs is not None:
+            self._obs.event(name, chip_id=self.cfg.chip_id, **args)
+
+    def _record_latency(self, wall_s: float, n_frames: int) -> None:
+        if self._obs is not None:
+            self._obs.histogram("serving_microbatch_wall_ms").record(
+                wall_s * 1e3)
+            self._obs.counter("serving_frames_total").inc(n_frames)
+
+    def _record_probe(self, p: clock.WallProbe) -> None:
+        self._record_latency(p.latency, p.tags.get("frames", 0))
+        if self._obs is not None:
+            self._obs.complete_span("microbatch_ready", p.t0,
+                                    p.t0 + p.latency, **p.tags)
+
+    def _finish_batch(self, outs: List[Dict], sizes: List[int]) -> Dict:
+        """Merge one incoming batch's microbatch outputs; in async mode
+        drain the in-flight probes (the ONE blocking point per batch) and
+        patch the merged wall to the honest first-dispatch-to-last-ready
+        interval. Sync mode with a single microbatch returns the output
+        untouched — bit-identical to the pre-obs engine."""
+        probes, self._batch_probes = self._batch_probes, []
+        for p in self._pending.drain():
+            self._record_probe(p)
+        merged = (_merge_outputs(outs, sizes) if len(outs) > 1
+                  else outs[0])
+        if probes:
+            t0, t1 = clock.span_bounds(probes)
+            wall = max(t1 - t0, 1e-9)
+            merged = dict(merged)
+            merged["wall_ms"] = wall * 1e3
+            merged["throughput_fps"] = sum(sizes) / wall
+        return merged
+
     # --- sensor-lifetime state machine (DESIGN.md §8) -----------------------
 
     def _init_lifetime(self, drift, schedule, calibration_frames) -> None:
@@ -173,7 +238,7 @@ class VisionEngine:
         if schedule is not None:
             self._scheduler = lt.RecalibrationScheduler(
                 schedule, pcfg, calibration_frames, self.params["p2m"],
-                frame_spec=self._frame_spec())
+                frame_spec=self._frame_spec(), obs=self._obs)
 
     def _aged_params(self):
         """The param tree for the current frame-clock age (array operands:
@@ -201,6 +266,12 @@ class VisionEngine:
                 st.last_recal_frame = st.age_frames
                 st.recal_energy_pj += self._scheduler.recal_energy_pj
                 fired = 1.0
+                self._event("recalibration", age_frames=st.age_frames,
+                            recal_count=st.recal_count,
+                            rate_err=float(st.rate_err),
+                            energy_pj=float(st.recal_energy_pj))
+        if self._obs is not None and self._scheduler is not None:
+            self._obs.gauge("lifetime_rate_err").set(float(st.rate_err))
         return {"lifetime_age_frames": float(st.age_frames),
                 "lifetime_recal_count": float(st.recal_count),
                 "lifetime_recal_fired": fired,
@@ -274,7 +345,8 @@ class VisionEngine:
         return self._classify(frames, key, advance=key is None)
 
     def _classify(self, frames: jax.Array, key: Optional[jax.Array],
-                  advance: bool, fused: Optional[bool] = None) -> Dict:
+                  advance: bool, fused: Optional[bool] = None,
+                  defer: bool = False) -> Dict:
         """``fused`` is tri-state: None = not a pallas-stream call (classify
         and non-pallas streams — no streaming telemetry keys, bit-identical
         to a plain engine); False = a pallas stream step the tuner/caller
@@ -282,25 +354,54 @@ class VisionEngine:
         Every pallas-stream step (either boolean) emits the SAME aux keys,
         so ``_merge_outputs`` never sees a mixed-key microbatch set even
         when the fused decision differs per microbatch shape (e.g. a
-        non-divisible tail)."""
+        non-divisible tail).
+
+        ``defer=True`` (stream steps unless ``sync_timing``) dispatches
+        WITHOUT blocking: the step's honest end-to-end latency is latched
+        by a :class:`repro.obs.clock.WallProbe` at the next non-blocking
+        poll or the batch-boundary drain, and ``_finish_batch`` patches
+        the merged ``wall_ms``. The per-microbatch ``wall_ms`` on this
+        path is the dispatch-side elapsed time only."""
         if key is None:
             key = jax.random.fold_in(self._key, self._frame_count)
             self._frame_count += 1
         params = self.params if self.lifetime is None else self._aged_params()
-        # the wall/throughput counters are HONEST (device-synchronized)
-        # measurements, which costs the async-dispatch overlap between
-        # microbatches. On this repo's CPU/interpret simulation target that
-        # overlap is nil; a latency-critical accelerator deployment would
-        # move the sync off the serving path (async telemetry) instead.
-        t0 = time.perf_counter()
-        if fused:
-            out, drift, ran_fused = self._fused_classify(params, frames, key)
-        else:
-            out = jax.block_until_ready(
-                self._step(params, self._shard_frames(frames), key))
-            drift, ran_fused = 0.0, False
-        wall = time.perf_counter() - t0
         n = frames.shape[0]
+        # harvest any already-finished in-flight steps before dispatching
+        # the next one: their latency latches at the tightest observable
+        # timestamp instead of waiting for the batch-boundary drain
+        for p in self._pending.poll():
+            self._record_probe(p)
+        probe = None
+        t0 = clock.now()
+        if fused:
+            # the fused drift guard reads the fresh theta on the host, so
+            # this path is inherently synchronized — its wall is honest
+            with self._span("microbatch", frames=n, path="fused"):
+                out, drift, ran_fused = self._fused_classify(params, frames,
+                                                             key)
+            wall = clock.now() - t0
+            if defer and not self._sync_timing:
+                # already measured, but the batch's honest span bounds must
+                # still cover this step
+                self._batch_probes.append(
+                    clock.WallProbe.completed(t0, wall, frames=n))
+        else:
+            drift, ran_fused = 0.0, False
+            if defer and not self._sync_timing:
+                with self._span("microbatch", frames=n, path="exact"):
+                    out = self._step(params, self._shard_frames(frames), key)
+                probe = self._pending.add(
+                    clock.WallProbe(out["labels"], t0=t0, frames=n))
+                self._batch_probes.append(probe)
+                wall = clock.now() - t0
+            else:
+                # honest-but-blocking: device-synchronized wall (classify()
+                # single shots and sync_timing=True streams)
+                with self._span("microbatch", frames=n, path="exact"):
+                    out = jax.block_until_ready(
+                        self._step(params, self._shard_frames(frames), key))
+                wall = clock.now() - t0
         out = dict(out)
         if fused is not None:
             # streaming telemetry: fraction of fused steps and the audited
@@ -313,6 +414,10 @@ class VisionEngine:
         out["throughput_fps"] = n / wall
         out["sensor_latency_us"] = self._sensor_latency_us
         out["sensor_fps"] = self._sensor_fps
+        if probe is None:
+            # synchronized paths record immediately; probed steps record
+            # when their probe latches (poll or drain)
+            self._record_latency(wall, n)
         if self.lifetime is not None and advance:
             out.update(self._advance_lifetime(out, n))
         return out
@@ -346,11 +451,17 @@ class VisionEngine:
         out = jax.block_until_ready(self._fused_step(
             params, frames, key, jnp.asarray(carry, jnp.float32)))
         self.fused_step_count += 1
+        if self._obs is not None:
+            self._obs.counter("serving_fused_steps_total").inc()
         fresh = float(out["theta"])
         drift = abs(fresh - carry) / max(abs(carry), 1e-9)
         if drift > self._fused_theta_tol:
             # the carried threshold went stale (scene change): serve this
             # microbatch from the exact pipeline and restart the EMA
+            self._event("drift_guard_fallback", drift=drift,
+                        theta_carry=carry, theta_fresh=fresh)
+            if self._obs is not None:
+                self._obs.counter("serving_fused_fallback_total").inc()
             out = dict(jax.block_until_ready(
                 self._step(params, frames, key)))
             out["theta_used"] = out["theta"]
@@ -397,19 +508,23 @@ class VisionEngine:
                     return None
                 return self._stream_fused_enabled(n_frames, h, w)
 
-            if not mb or b <= mb:
-                yield self._classify(frames, None, advance=True,
-                                     fused=fused_arg(b))
-                continue
-            base = jax.random.fold_in(self._key, self._frame_count)
-            self._frame_count += 1
-            starts = list(range(0, b, mb))
-            sizes = [min(mb, b - i) for i in starts]
-            outs = [self._classify(frames[i:i + sz],
-                                   key=jax.random.fold_in(base, j),
-                                   advance=True, fused=fused_arg(sz))
-                    for j, (i, sz) in enumerate(zip(starts, sizes))]
-            yield _merge_outputs(outs, sizes)
+            with self._span("stream", frames=b):
+                if not mb or b <= mb:
+                    outs = [self._classify(frames, None, advance=True,
+                                           fused=fused_arg(b), defer=True)]
+                    sizes = [b]
+                else:
+                    base = jax.random.fold_in(self._key, self._frame_count)
+                    self._frame_count += 1
+                    starts = list(range(0, b, mb))
+                    sizes = [min(mb, b - i) for i in starts]
+                    outs = [self._classify(frames[i:i + sz],
+                                           key=jax.random.fold_in(base, j),
+                                           advance=True, fused=fused_arg(sz),
+                                           defer=True)
+                            for j, (i, sz) in enumerate(zip(starts, sizes))]
+                merged = self._finish_batch(outs, sizes)
+            yield merged
 
 
 # aux keys that are per-CHANNEL vectors, not per-example rows: merged by
@@ -424,6 +539,11 @@ _CUMULATIVE_KEYS = ("lifetime_age_frames", "lifetime_recal_count",
 _EVENT_KEYS = ("lifetime_recal_fired",)
 # additive costs: the batch's total, not a per-microbatch average
 _SUM_KEYS = ("wall_ms",)
+# engine constants (modeled sensor budget): identical in every microbatch —
+# pass the first through VERBATIM. Frame-weighted averaging them (the old
+# fallthrough) silently cast the f64 python float through an f32 stack and
+# could drift in the last ulp under non-dyadic weight normalization.
+_CONSTANT_KEYS = ("sensor_latency_us", "sensor_fps")
 
 
 def _merge_outputs(outs: List[Dict], sizes: List[int]) -> Dict:
@@ -433,10 +553,11 @@ def _merge_outputs(outs: List[Dict], sizes: List[int]) -> Dict:
     per-channel vectors (``channel_rates``) and scalar monitoring stats are
     reduced respecting their semantics: cumulative lifetime counters by
     last-value, recalibration events by any-fired, wall clock by total (and
-    ``throughput_fps`` recomputed from it), min/max keys by min/max,
-    everything else — means, rates, and per-frame energies — by a
-    frame-count-WEIGHTED mean (the tail microbatch of a batch that does not
-    divide evenly must not be over-weighted).
+    ``throughput_fps`` recomputed from it), engine constants
+    (``sensor_latency_us``/``sensor_fps``) passed through verbatim, min/max
+    keys by min/max, everything else — means, rates, and per-frame
+    energies — by a frame-count-WEIGHTED mean (the tail microbatch of a
+    batch that does not divide evenly must not be over-weighted).
     """
     w = jnp.asarray(sizes, jnp.float32)
     w = w / jnp.sum(w)
@@ -451,6 +572,8 @@ def _merge_outputs(outs: List[Dict], sizes: List[int]) -> Dict:
             merged[k] = max(float(v) for v in vals)
         elif k in _SUM_KEYS:
             merged[k] = sum(float(v) for v in vals)
+        elif k in _CONSTANT_KEYS:
+            merged[k] = vals[0]
         elif getattr(vals[0], "ndim", 0) >= 1:
             merged[k] = jnp.concatenate(vals, axis=0)
         elif k.endswith("_min"):

@@ -18,7 +18,6 @@ Features (all exercised by tests/test_train_loop.py):
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax

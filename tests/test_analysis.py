@@ -220,10 +220,15 @@ class TestAstRules:
         """
         assert _lint(src) == []
 
-    def test_wallclock_flagged_perf_counter_ok(self):
+    def test_wallclock_single_clock_rule(self):
         assert _rules(_lint("import time\nt = time.time()\n")) == \
             ["no-wallclock"]
-        assert _lint("import time\nt = time.perf_counter()\n") == []
+        # single-clock rule: perf_counter is banned everywhere ...
+        assert _rules(_lint("import time\nt = time.perf_counter()\n")) == \
+            ["no-wallclock"]
+        # ... except inside repro.obs.clock itself, the one sanctioned site
+        assert _lint("import time\nt = time.perf_counter()\n",
+                     rel="src/repro/obs/clock.py") == []
 
     def test_host_rng_flagged(self):
         assert _rules(_lint("import numpy as np\nx = np.random.rand(3)\n")) \

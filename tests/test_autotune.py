@@ -70,6 +70,12 @@ class TestPersistence:
         autotune.save_table(path)
         autotune.clear()
         assert autotune.lookup(4096, 27, 32) is None
+        # the "_meta" provenance stamp is present but NOT a table entry
+        import json
+        with open(path) as f:
+            raw = json.load(f)
+        assert raw["_meta"]["bench"] == "autotune"
+        assert raw["_meta"]["entries"] == 2
         assert autotune.load_table(path) == 2
         assert autotune.lookup(4096, 27, 32) == autotune.TileChoice(
             2048, 4096, 4096, True)
