@@ -16,6 +16,7 @@ def main() -> None:
     from benchmarks import fleet_bench
     from benchmarks import lifetime_bench
     from benchmarks import paper_benchmarks as pb
+    from benchmarks import serving_bench
     from benchmarks import variation_bench
     benches = [
         pb.bench_frontend_backends,
@@ -29,6 +30,7 @@ def main() -> None:
         variation_bench.bench_rows,
         lifetime_bench.bench_rows,
         fleet_bench.bench_rows,
+        serving_bench.bench_rows,
     ]
     print(f"# meta: {json.dumps(bench_meta('paper_tables'), sort_keys=True)}",
           file=sys.stderr)

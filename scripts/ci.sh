@@ -12,6 +12,9 @@
 # the tier-1 run (use `-m slow` to run them).
 # scripts/lint.sh runs FIRST and cheap (DESIGN.md §11): the AST rule pass
 # plus the entry-point jaxpr/HLO census against ANALYSIS_BUDGETS.json.
+# The serving-harness quick gates (DESIGN.md §13) run next, still BEFORE
+# tier-1: harness-driven census + retrace + obs=None-parity +
+# trace-determinism checks, writing BENCH_serving.json.
 # This subsumes the old per-bench --quick census gates (one census
 # implementation, identical thresholds): it fails the build if the pallas
 # dot/conv structure or matmul flop budget drifts, or if the vmapped
@@ -27,6 +30,11 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 scripts/lint.sh
+# serving harness quick gates (census / retrace / obs=None parity /
+# deterministic trace) — cheap, so they run before the test suite
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/serving_bench.py --quick --warnings-as-errors \
+    --out BENCH_serving.json
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/frontend_bench.py --smoke --out BENCH_frontend.json

@@ -1,10 +1,16 @@
 """CLI for the observability layer: ``python -m repro.obs``.
 
-Three subcommands:
+Four subcommands:
 
     python -m repro.obs summary FILE.jsonl   # span/event/metric digest
+    python -m repro.obs compare A.jsonl B.jsonl  # metric diff of two runs
     python -m repro.obs smoke [--out DIR]    # end-to-end obs smoke + gates
     python -m repro.obs chrome IN.jsonl OUT.json  # chrome://tracing wrap
+
+``compare`` diffs the metric records of two exported runs — counter and
+gauge deltas, per-histogram count and p50/p95/p99 deltas — so a serving
+bench regression is inspectable straight off two ``obs`` JSONL exports
+without an ad-hoc script.
 
 ``smoke`` is what ``scripts/ci.sh`` runs: it drives a short obs-enabled
 ``VisionEngine.stream`` and ``FleetEngine.serve``, asserts the exports are
@@ -81,6 +87,61 @@ def cmd_summary(args: argparse.Namespace) -> int:
         print(f"FAIL: {args.file} holds no records", file=sys.stderr)
         return 1
     print(_summarize(records))
+    return 0
+
+
+# -- compare ------------------------------------------------------------------
+
+def _metric_index(records: List[Dict[str, Any]]) -> Dict[str, Dict[str, Any]]:
+    return {r["name"]: r for r in records if r.get("ph") == "C"}
+
+
+def _delta(a: Optional[float], b: Optional[float]) -> str:
+    if a is None or b is None:
+        return "n/a"
+    d = float(b) - float(a)
+    rel = f" ({d / a:+.1%})" if a else ""
+    return f"{d:+.6g}{rel}"
+
+
+def compare_text(recs_a: List[Dict[str, Any]],
+                 recs_b: List[Dict[str, Any]]) -> str:
+    """Human-readable metric diff of two exported runs (A -> B)."""
+    a, b = _metric_index(recs_a), _metric_index(recs_b)
+    lines: List[str] = []
+    for name in sorted(set(a) | set(b)):
+        ra, rb = a.get(name), b.get(name)
+        if ra is None or rb is None:
+            which = "B" if ra is None else "A"
+            lines.append(f"  {name:<32} only in {which}")
+            continue
+        if ra.get("type") == "histogram":
+            parts = [f"count {_delta(ra['count'], rb['count'])}"]
+            for q in ("p50", "p95", "p99"):
+                parts.append(f"{q} {_delta(ra.get(q), rb.get(q))}")
+            lines.append(f"  hist  {name:<26} " + "  ".join(parts))
+        else:
+            lines.append(f"  {ra.get('type', 'metric'):<5} {name:<26} "
+                         f"{_fmtv(ra.get('value'))} -> "
+                         f"{_fmtv(rb.get('value'))}  "
+                         f"{_delta(ra.get('value'), rb.get('value'))}")
+    if not lines:
+        return "no metric records in either file"
+    return "\n".join([f"{len(a)} metric(s) in A, {len(b)} in B:"] + lines)
+
+
+def _fmtv(v: Optional[float]) -> str:
+    return "none" if v is None else f"{float(v):.6g}"
+
+
+def cmd_compare(args: argparse.Namespace) -> int:
+    from repro.obs import export
+    recs_a = export.read_jsonl(args.file_a)
+    recs_b = export.read_jsonl(args.file_b)
+    if not _metric_index(recs_a) and not _metric_index(recs_b):
+        print("FAIL: neither file holds metric records", file=sys.stderr)
+        return 1
+    print(compare_text(recs_a, recs_b))
     return 0
 
 
@@ -197,6 +258,11 @@ def main(argv=None) -> int:
     p = sub.add_parser("summary", help="digest an obs JSONL export")
     p.add_argument("file")
     p.set_defaults(fn=cmd_summary)
+    p = sub.add_parser("compare",
+                       help="diff the metrics of two obs JSONL exports")
+    p.add_argument("file_a")
+    p.add_argument("file_b")
+    p.set_defaults(fn=cmd_compare)
     p = sub.add_parser("smoke",
                        help="end-to-end obs smoke + overhead gates (CI)")
     p.add_argument("--out", default=None,

@@ -89,8 +89,17 @@ def prometheus_text(registry: MetricsRegistry) -> str:
         elif kind == "gauge":
             lines.append(f"# TYPE {inst.name} gauge")
             lines.append(f"{inst.name} {_fmt(snap['value'])}")
-        else:                                   # histogram -> summary
-            lines.append(f"# TYPE {inst.name} summary")
+        else:                # histogram -> buckets + quantile summary
+            # real Prometheus histogram series: cumulative _bucket{le=}
+            # samples straight off the occupied log-bucket edges (sparse
+            # emission of a cumulative series is lossless), terminated by
+            # the mandatory le="+Inf" == _count
+            lines.append(f"# TYPE {inst.name} histogram")
+            for edge, cum in inst.cumulative_buckets():
+                le = "+Inf" if edge == float("inf") else _fmt(edge)
+                lines.append(f'{inst.name}_bucket{{le="{le}"}} {cum}')
+            # the pre-existing summary view rides along (same name — this
+            # exposition is self-scraped, not fed to a strict parser)
             for q in (0.5, 0.95, 0.99):
                 lines.append(f'{inst.name}{{quantile="{q}"}} '
                              f"{_fmt(inst.quantile(q))}")

@@ -140,6 +140,26 @@ class Histogram:
     def mean(self) -> float:
         return self.sum / self.count if self.count else math.nan
 
+    def cumulative_buckets(self) -> List[tuple]:
+        """Sparse cumulative buckets: ``(upper_edge, count_le_edge)``.
+
+        One pair per *occupied* interior bucket (its upper edge, the
+        count of values at or below it — underflow included) plus the
+        terminal ``(inf, count)`` pair that absorbs the overflow bucket.
+        This is exactly the Prometheus ``_bucket{le=...}`` series; the
+        pairwise count differences sum back to ``count`` (tested), so
+        sparse emission loses nothing.
+        """
+        out: List[tuple] = []
+        cum = self.counts[0]
+        for i in range(1, self.n_buckets + 1):
+            c = self.counts[i]
+            if c:
+                cum += c
+                out.append((self._edge(i + 1), cum))
+        out.append((math.inf, self.count))
+        return out
+
     def snapshot(self) -> Dict[str, object]:
         return {"type": "histogram", "count": self.count, "sum": self.sum,
                 "min": self.min if self.count else None,

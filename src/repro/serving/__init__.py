@@ -1,3 +1,6 @@
 from repro.serving.engine import ServingEngine, make_prefill_step, make_decode_step
 from repro.serving.fleet import FleetEngine, FleetState, FleetSweepPolicy
+from repro.serving.loadgen import (LoadgenConfig, Microbatch, Request,
+                                   find_knee, make_schedule,
+                                   plan_microbatches, record_slo, simulate)
 from repro.serving.vision import VisionEngine

@@ -717,7 +717,15 @@ class FleetEngine:
                 steps.append((group, outs, probe))
             # ... then drain once: the only blocking point of the batch.
             # Each probed step's honest wall overwrites its dispatch-side
-            # per-item shares before commit/merge.
+            # per-item shares before commit/merge. With obs enabled the
+            # drain itself becomes visible in METRICS too (it used to live
+            # only in spans): the per-batch drain wall and the
+            # outstanding-probe high-water mark (every probed step is
+            # still in flight when the drain starts — dispatch never
+            # harvests) land as a gauge/counter pair.
+            outstanding = (sum(1 for _, _, p in steps if p is not None)
+                           if self._obs is not None else 0)
+            drain_t0 = clock.now() if self._obs is not None else 0.0
             for group, outs, probe in steps:
                 if probe is None:
                     continue
@@ -731,6 +739,13 @@ class FleetEngine:
                     share = it.frames.shape[0] / total
                     o["wall_ms"] = wall * 1e3 * share
                     o["throughput_fps"] = total / wall
+            if self._obs is not None:
+                drain_ms = (clock.now() - drain_t0) * 1e3
+                self._obs.gauge("fleet_drain_wall_ms").set(drain_ms)
+                self._obs.gauge("fleet_probe_high_water").set(outstanding)
+                self._obs.counter("fleet_probes_drained_total").inc(
+                    outstanding)
+                self._obs.counter("fleet_drains_total").inc()
         per_req: Dict[int, List[Tuple[_WorkItem, Dict]]] = {}
         for group, outs, _ in steps:
             # commits run in item (plan) order — groups preserve it

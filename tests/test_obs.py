@@ -92,9 +92,44 @@ class TestMetrics:
         text = obs.exposition()
         assert "# TYPE serving_frames_total counter" in text
         assert "serving_frames_total 7.0" in text
-        assert '# TYPE wall_ms summary' in text
+        assert '# TYPE wall_ms histogram' in text
+        assert 'wall_ms_bucket{le="' in text
+        assert 'wall_ms_bucket{le="+Inf"} 1' in text
         assert 'wall_ms{quantile="0.5"}' in text
         assert "wall_ms_count 1.0" in text
+
+    def test_exposition_bucket_roundtrip(self):
+        """The ``_bucket{le=...}`` series must be a faithful cumulative
+        view: parsed bucket increments sum to ``_count`` and the +Inf
+        bucket equals the total, including under/overflow samples."""
+        reg = MetricsRegistry()
+        h = reg.histogram("lat_ms", lo=1.0, hi=100.0, n_buckets=16)
+        rng = np.random.default_rng(3)
+        xs = np.concatenate([rng.lognormal(2.0, 1.0, 500),
+                             [0.01, 0.02, 5000.0]])   # under + overflow
+        for x in xs:
+            h.record(float(x))
+        text = export.prometheus_text(reg)
+        cums, count = [], None
+        for line in text.splitlines():
+            if line.startswith('lat_ms_bucket{le="'):
+                le = line.split('le="')[1].split('"')[0]
+                cum = float(line.rsplit(" ", 1)[1])
+                cums.append((math.inf if le == "+Inf" else float(le), cum))
+            elif line.startswith("lat_ms_count"):
+                count = float(line.rsplit(" ", 1)[1])
+        assert count == len(xs)
+        # cumulative: non-decreasing edges AND counts, +Inf == _count
+        assert cums == sorted(cums)
+        assert cums[-1][0] == math.inf and cums[-1][1] == count
+        # per-bucket increments (diff of the cumulative series, first
+        # bucket included) sum back to _count — the round-trip claim
+        increments = [cums[0][1]] + [b - a for (_, a), (_, b)
+                                     in zip(cums, cums[1:])]
+        assert all(d >= 0 for d in increments)
+        assert sum(increments) == count
+        # and the cumulative view agrees with the histogram's own API
+        assert h.cumulative_buckets() == [(e, int(c)) for e, c in cums]
 
 
 # ---------------------------------------------------------------------------
@@ -361,3 +396,73 @@ class TestFleetObs:
         assert recs[0]["ph"] == "M" and recs[0]["meta"]["bench"] == "test"
         assert any(r["ph"] == "C" and r["name"] == "serving_frames_total"
                    for r in recs)
+
+    def test_fleet_drain_metrics(self, params):
+        """The serve() drain wall and outstanding-probe high-water must
+        land as a gauge/counter pair when obs is enabled (the async
+        off-path telemetry the serving bench reads per window)."""
+        obs = obs_mod.Obs()
+        # fused steps are inherently synchronized (probe=None): pin the
+        # async exact path so the drain actually has probes outstanding
+        fe = FleetEngine(CFG, params, backend="pallas", seed=0, obs=obs,
+                         fused_stream=False)
+        fe.add_chip(0)
+        fe.add_chip(1)
+        frames = _batches([4])[0]
+        fe.serve([(0, frames), (1, frames)])
+        fe.serve([(0, frames), (1, frames)])
+        reg = obs.registry
+        assert reg.gauge("fleet_drain_wall_ms").value >= 0.0
+        # two chips' probes outstanding at each drain, latched as the
+        # high-water gauge and burned into the drained-total counter
+        assert reg.gauge("fleet_probe_high_water").value >= 1.0
+        assert reg.counter("fleet_probes_drained_total").value >= 2.0
+        assert reg.counter("fleet_drains_total").value == 2.0
+
+
+# ---------------------------------------------------------------------------
+# CLI: the compare subcommand
+# ---------------------------------------------------------------------------
+
+class TestCompareCLI:
+    def _export(self, tmp_path, name, frames, wall):
+        obs = obs_mod.Obs(tracing=False)
+        obs.counter("serving_frames_total").inc(frames)
+        obs.gauge("fleet_size").set(2)
+        for w in wall:
+            obs.histogram("wall_ms").record(w)
+        path = str(tmp_path / name)
+        obs.export_jsonl(path)
+        return path
+
+    def test_compare_diffs_two_runs(self, tmp_path, capsys):
+        from repro.obs.__main__ import main as obs_main
+        a = self._export(tmp_path, "a.jsonl", frames=8, wall=[1.0, 2.0])
+        b = self._export(tmp_path, "b.jsonl", frames=12, wall=[1.0, 2.0,
+                                                               40.0])
+        assert obs_main(["compare", a, b]) == 0
+        out = capsys.readouterr().out
+        assert "3 metric(s) in A, 3 in B" in out
+        # counter delta with relative change, histogram count + p99 drift
+        assert "serving_frames_total" in out and "+4" in out
+        assert "hist  wall_ms" in out and "count +1" in out
+        assert "fleet_size" in out
+
+    def test_compare_reports_one_sided_metrics(self, tmp_path, capsys):
+        from repro.obs.__main__ import main as obs_main
+        a = self._export(tmp_path, "a.jsonl", frames=8, wall=[1.0])
+        obs = obs_mod.Obs(tracing=False)
+        obs.counter("recal_total").inc(1)
+        b = str(tmp_path / "b.jsonl")
+        obs.export_jsonl(b)
+        assert obs_main(["compare", a, b]) == 0
+        out = capsys.readouterr().out
+        assert "recal_total" in out and "only in B" in out
+        assert "only in A" in out
+
+    def test_compare_fails_without_metrics(self, tmp_path, capsys):
+        from repro.obs.__main__ import main as obs_main
+        empty = str(tmp_path / "e.jsonl")
+        export.write_jsonl(empty, [{"ph": "i", "name": "x", "ts": 0.0}])
+        assert obs_main(["compare", empty, empty]) == 1
+        assert "FAIL" in capsys.readouterr().err
