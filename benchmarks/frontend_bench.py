@@ -22,6 +22,14 @@ variants against each other and the pre-fix double-conv reconstruction:
 All cross-variant ratios come from INTERLEAVED timing (alternating
 single-shot measurements, min of each) so host-load drift cannot bias them.
 
+A ``quant`` block (DESIGN.md §14) times the int8 fused streaming step
+against the f32 fused step — both precisions pinned through
+``FrontendConfig.precision``, both wall modes (``draws_only`` with the aux
+stats DCE'd, ``as_served`` returning the full (acts, aux)) interleaved —
+and records the autotuner's per-shape precision choice. The first
+regeneration after the int8 path landed preserves the f32-only headline
+numbers under ``before_quant``.
+
 A ``majority_hetero`` microbench times the vectorized Poisson-binomial tree
 against the legacy scan-shaped DP it replaced (``mtj.majority_prob_hetero``
 vs ``mtj.majority_prob_hetero_dp``).
@@ -245,6 +253,55 @@ def run(smoke: bool = False) -> dict:
     results["pallas_exact_vs_analog"] = (
         results["backends"]["analog"]["wall_ms"] / new["wall_ms_exact"])
 
+    # --- quantized fused path (DESIGN.md §14) -----------------------------
+    # Both precisions, both wall modes, interleaved. ``draws_only`` jits the
+    # activations alone (the aux stats DCE away — the historical headline
+    # mode of ``pallas_stream`` above); ``as_served`` returns the full
+    # (acts, aux) tuple the way VisionEngine.stream() actually consumes the
+    # step. Precision is PINNED through FrontendConfig for each variant so
+    # the ratio is a controlled comparison no matter which precision the
+    # autotuner just installed for this shape.
+    import dataclasses as _dc
+
+    from repro import frontend as frontend_mod
+
+    def _steps(prec):
+        fe_ = frontend_mod.SensorFrontend(_dc.replace(fe_cfg, precision=prec))
+        draws = jax.jit(lambda p, x, k: fe_(p, x, key=k, mode="pallas")[0])
+        served = jax.jit(lambda p, x, k: fe_(p, x, key=k, mode="pallas"))
+        return draws, served
+
+    f32_draws, f32_served = _steps("f32")
+    q8_draws, q8_served = _steps("int8")
+    qms = _interleave_ms({
+        "f32_draws": lambda: f32_draws(stream_params, frames, key),
+        "f32_served": lambda: f32_served(stream_params, frames, key),
+        "int8_draws": lambda: q8_draws(stream_params, frames, key),
+        "int8_served": lambda: q8_served(stream_params, frames, key),
+    }, rounds=4 * repeats)
+    results["quant"] = {
+        # what the tuner picked for this shape (also in the tile table)
+        "precision_autotuned": choice.precision,
+        "fused": {prec: {
+            "wall_ms_draws_only": qms[f"{prec}_draws"],
+            "wall_ms_as_served": qms[f"{prec}_served"],
+            "frames_per_s_as_served": batch / (qms[f"{prec}_served"] / 1e3),
+            "wall_mode": "fused_stream_steady_state",
+        } for prec in ("f32", "int8")},
+        "int8_speedup_draws_only": qms["f32_draws"] / qms["int8_draws"],
+        "int8_speedup_as_served": qms["f32_served"] / qms["int8_served"],
+        "note": ("interpret-mode CPU walls: XLA:CPU rewrites the s8 x s8 "
+                 "dot into an f32 GEMM, so these ratios measure the fused "
+                 "q8 kernel's structural savings (two outputs, no "
+                 "duplicated transcendental chains), not int8 MAC "
+                 "throughput. The >=2x target is the real-MXU expectation "
+                 "(int8 MACs at 2x the f32 MXU issue rate + halved VMEM "
+                 "operand traffic); the int8 op structure that claim rests "
+                 "on is pinned by the quant.* census entries "
+                 "(ANALYSIS_BUDGETS.json)."),
+    }
+    results["backends"]["pallas"]["precision"] = choice.precision
+
     # --- vectorized Poisson-binomial majority microbench ------------------
     # device-sim shaped operand: every output site x channel x 8 MTJs
     p_dev = jax.random.uniform(jax.random.PRNGKey(7),
@@ -288,6 +345,15 @@ def main() -> None:
         with open(args.out) as f:
             prev = json.load(f)
         results["before"] = prev.get("before", prev)
+        # the first regeneration after the int8 datapath landed pins the
+        # last f32-only run's headline numbers as `before_quant`, forever
+        # (same convention as `before`)
+        results["before_quant"] = prev.get("before_quant") or {
+            "backends_pallas": prev.get("backends", {}).get("pallas"),
+            "pallas_speedup_vs_prefix": prev.get("pallas_speedup_vs_prefix"),
+            "pallas_stream_vs_analog": prev.get("pallas_stream_vs_analog"),
+            "pallas_exact_vs_analog": prev.get("pallas_exact_vs_analog"),
+        }
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     print(f"wrote {args.out}")
@@ -301,6 +367,11 @@ def main() -> None:
     print(f"  pallas stream vs analog: "
           f"{results['pallas_stream_vs_analog']:.2f}x   "
           f"speedup vs pre-fix: {results['pallas_speedup_vs_prefix']:.2f}x")
+    q = results["quant"]
+    print(f"  int8 fused vs f32 fused: "
+          f"{q['int8_speedup_as_served']:.2f}x as-served, "
+          f"{q['int8_speedup_draws_only']:.2f}x draws-only "
+          f"(tuner picked {q['precision_autotuned']})")
     print(f"  majority hetero tree vs scan DP: "
           f"{results['majority_hetero']['speedup']:.2f}x")
 

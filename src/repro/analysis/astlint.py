@@ -21,6 +21,12 @@ Each rule guards an invariant that was broken (or nearly broken) once:
 ``orphan-module``      every module under ``src/repro`` must be reachable
                        from the test/bench/example import graph or a
                        declared CLI root — dead modules rot silently
+``q8-f32-dot``         in ``kernels/`` quantized code paths (functions whose
+                       name contains ``q8``) every ``jnp.dot`` must pin its
+                       accumulator via ``preferred_element_type=`` and must
+                       not hard-code ``jnp.float32`` there — a bare dot
+                       silently re-promotes the int8 MAC to an f32 GEMM and
+                       forfeits the MXU int8 path (DESIGN.md §14)
 
 Waive a finding either inline (``# analysis: waive=<rule>`` on the flagged
 line) or with a ``{rule, path, reason}`` entry under ``waivers.ast`` in
@@ -45,7 +51,7 @@ CLI_ROOTS = (
 CLOCK_MODULE = "src/repro/obs/clock.py"
 
 RULES = ("physics-constants", "vmap-needs-jit", "no-wallclock",
-         "no-host-rng", "frozen-config", "orphan-module")
+         "no-host-rng", "frozen-config", "orphan-module", "q8-f32-dot")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +114,7 @@ class _FileLint:
         self.tree = ast.parse(source, filename=path)
         self.protected = protected_constants
         self.in_core = "/core/" in rel.replace(os.sep, "/")
+        self.in_kernels = "/kernels/" in rel.replace(os.sep, "/")
         self.is_clock = rel.replace(os.sep, "/") == CLOCK_MODULE
         self.violations: List[Violation] = []
         self.parents: Dict[ast.AST, ast.AST] = {}
@@ -196,6 +203,33 @@ class _FileLint:
                            "mutation)")
             return
 
+    def _check_q8_dot(self, node: ast.Call) -> None:
+        if not self.in_kernels:
+            return
+        d = _dotted(node.func)
+        if d not in ("jnp.dot", "jax.numpy.dot"):
+            return
+        in_q8 = any(
+            isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and "q8" in anc.name for anc in self._ancestors(node))
+        if not in_q8:
+            return
+        pet = next((kw.value for kw in node.keywords
+                    if kw.arg == "preferred_element_type"), None)
+        if pet is None:
+            self._flag("q8-f32-dot", node,
+                       "jnp.dot in a q8 kernel path without "
+                       "preferred_element_type= — the accumulator dtype "
+                       "must be pinned (int32 on the MXU, f32 only in "
+                       "interpret mode) or XLA re-promotes the int8 MAC "
+                       "to an f32 GEMM")
+        elif _dotted(pet) in ("jnp.float32", "jax.numpy.float32",
+                              "np.float32", "numpy.float32"):
+            self._flag("q8-f32-dot", node,
+                       "jnp.dot in a q8 kernel path hard-codes an f32 "
+                       "accumulator — thread the interpret-dependent "
+                       "acc dtype instead (int32 on real MXU hardware)")
+
     def _check_constants(self, node: ast.Constant) -> None:
         if self.in_core or not isinstance(node.value, float):
             return
@@ -210,6 +244,7 @@ class _FileLint:
         for node in ast.walk(self.tree):
             if isinstance(node, ast.Call):
                 self._check_vmap(node)
+                self._check_q8_dot(node)
             if isinstance(node, ast.Attribute):
                 self._check_wallclock(node)
             if isinstance(node, (ast.Attribute, ast.Call)):

@@ -49,6 +49,15 @@ EXPECTED_FRONTEND_CENSUS = {
     "frontend.device": {"dot_count": 0, "conv_count": 1},
     "frontend.ideal": {"dot_count": 0, "conv_count": 1},
 }
+# the quantized fused step (DESIGN.md §14): exactly ONE dot, both operands
+# int8, zero f32-operand dots, and the accumulator dtype pinned per mode —
+# f32 in interpret mode (exact: products < 2^14, K=27 keeps sums < 2^24),
+# int32 on the real-MXU trace. Checked against the JAXPR census because
+# XLA:CPU rewrites s8 dots into f32 GEMMs in optimized HLO.
+EXPECTED_QUANT_JAXPR = {
+    "quant.fused_q8": {"dot_i8": 1, "dot_f32": 0, "acc": "float32"},
+    "quant.fused_q8_mxu": {"dot_i8": 1, "dot_f32": 0, "acc": "int32"},
+}
 PALLAS_MATMUL_BUDGET = 1.2     # flops vs ideal census  # analysis: waive=physics-constants (threshold, not the 1.2 V pixel constant)
 FLEET_FLOP_BUDGET = 2.05       # G=2 flops vs G=1 (chip axis must batch)
 
@@ -64,7 +73,7 @@ TRAIN_BATCH = 8
 
 _RNG_PRIMS = ("threefry2x32", "random_seed", "random_bits", "random_wrap",
               "random_unwrap", "random_fold_in", "random_gamma",
-              "random_clone")
+              "random_clone", "prng_seed", "prng_random_bits")
 
 
 def _classify_prim(name: str) -> Optional[str]:
@@ -96,35 +105,56 @@ def _sub_jaxprs(value):
             yield from _sub_jaxprs(v)
 
 
-def _walk_jaxpr(jaxpr, counts: Dict[str, int]) -> None:
+def _walk_jaxpr(jaxpr, counts: Dict[str, int],
+                i8_sigs: List[str]) -> None:
     import jax.numpy as jnp
     for eqn in jaxpr.eqns:
         counts["eqn_count"] += 1
         kind = _classify_prim(eqn.primitive.name)
         if kind is not None:
             counts[kind] += 1
+        if eqn.primitive.name == "dot_general":
+            # operand-dtype split of the dots (DESIGN.md §14): the quantized
+            # path is pinned at the JAXPR level — XLA:CPU rewrites an
+            # s8 x s8 -> f32 dot into an f32 GEMM in optimized HLO, so an
+            # HLO-level gate would never see the int8 operands.
+            avals = [v.aval for v in eqn.invars]
+            dts = [str(a.dtype) for a in avals]
+            if all(d == "int8" for d in dts):
+                counts["dot_i8"] += 1
+                out_dt = str(eqn.outvars[0].aval.dtype)
+                i8_sigs.append(
+                    "x".join(f"{'x'.join(map(str, a.shape))}:{d}"
+                             for a, d in zip(avals, dts)) + f"->{out_dt}")
+            elif any(d == "float32" for d in dts):
+                counts["dot_f32"] += 1
         if (eqn.primitive.name == "convert_element_type"
                 and eqn.params.get("new_dtype") == jnp.float64):
             counts["f64_convert"] += 1
         for v in eqn.params.values():
             for sub in _sub_jaxprs(v):
-                _walk_jaxpr(sub, counts)
+                _walk_jaxpr(sub, counts, i8_sigs)
 
 
-def jaxpr_census(fn: Callable, *args, **kwargs) -> Dict[str, int]:
+def jaxpr_census(fn: Callable, *args, **kwargs) -> Dict[str, object]:
     """Trace ``fn`` (without executing) and count primitives of interest.
 
     Counts are *static* — an op inside a scan/while body counts once
     (matching the HLO census semantics in ``hlo_analysis.matmul_stats``);
     sub-jaxprs (pjit bodies, cond branches, pallas kernel bodies) are
-    walked recursively.
+    walked recursively. ``dot_i8`` / ``dot_f32`` split ``dot_general`` by
+    operand dtype, and ``dot_i8_sig`` pins each int8 dot's full
+    shape/dtype signature (operands and accumulator) as a string.
     """
     import jax
-    counts = {k: 0 for k in ("eqn_count", "dot_general", "conv", "gather",
-                             "scatter", "pallas_call", "rng",
-                             "host_callback", "f64_convert")}
+    counts: Dict[str, object] = {
+        k: 0 for k in ("eqn_count", "dot_general", "conv", "gather",
+                       "scatter", "pallas_call", "rng",
+                       "host_callback", "f64_convert", "dot_i8", "dot_f32")}
     closed = jax.make_jaxpr(fn)(*args, **kwargs)
-    _walk_jaxpr(closed.jaxpr, counts)
+    i8_sigs: List[str] = []
+    _walk_jaxpr(closed.jaxpr, counts, i8_sigs)
+    counts["dot_i8_sig"] = ";".join(i8_sigs)
     return counts
 
 
@@ -231,11 +261,45 @@ def _train_entries():
     yield "train.step", step, (params, batch, jax.random.PRNGKey(2))
 
 
+def _quant_entries():
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import p2m
+    from repro.kernels import ops
+    cfg = p2m.P2MConfig()
+    params = p2m.init_params(jax.random.PRNGKey(0), cfg)
+    wq = p2m.quantize_weights(params["w"], cfg.weight_bits)
+    v_th = params["v_th"]
+    frames = jax.random.uniform(jax.random.PRNGKey(1),
+                                (FRONTEND_BATCH, 32, 32, 3))
+    key = jax.random.PRNGKey(2)
+    theta = jnp.asarray(0.7, jnp.float32)
+    # the int8 fused streaming step as the CPU validation path runs it:
+    # interpret-mode pallas, f32 accumulator (exact — DESIGN.md §14)
+    step = jax.jit(functools.partial(
+        ops.p2m_frontend_fused, kernel=cfg.kernel_size, stride=cfg.stride,
+        precision="int8", interpret=True))
+    yield "quant.fused_q8", step, (frames, wq, v_th, theta, key)
+    # the SAME step the way a real TPU serves it: interpret=False (int32
+    # MXU accumulator) + on-device RNG. Jaxpr-only — Mosaic lowering needs
+    # TPU hardware, but make_jaxpr traces the kernel body fine, which is
+    # all the int8-dot-shape pin needs.
+    mxu = jax.jit(functools.partial(
+        ops.p2m_frontend_fused, kernel=cfg.kernel_size, stride=cfg.stride,
+        precision="int8", interpret=False, on_device_rng=True))
+    yield ("quant.fused_q8_mxu", mxu, (frames, wq, v_th, theta, key),
+           {"hlo": False})
+
+
 ENTRY_GROUPS: Dict[str, Callable] = {
     "frontend": _frontend_entries,
     "stream": _stream_entries,
     "fleet": _fleet_entries,
     "train": _train_entries,
+    "quant": _quant_entries,
 }
 
 
@@ -253,9 +317,14 @@ def collect(groups: Optional[Sequence[str]] = None,
         if g not in ENTRY_GROUPS:
             raise KeyError(f"unknown census group {g!r}; "
                            f"known: {sorted(ENTRY_GROUPS)}")
-        for name, fn, args in ENTRY_GROUPS[g]():
+        for item in ENTRY_GROUPS[g]():
+            # builders yield (name, fn, args) or (name, fn, args, opts);
+            # opts={"hlo": False} marks jaxpr-only entries (e.g. the
+            # interpret=False pallas trace, which cannot compile off-TPU)
+            name, fn, args = item[:3]
+            opts = item[3] if len(item) > 3 else {}
             entry: Dict[str, Dict] = {"jaxpr": jaxpr_census(fn, *args)}
-            if hlo:
+            if hlo and opts.get("hlo", True):
                 entry["hlo"], _ = hlo_census(fn, *args)
             out[name] = entry
     return out
@@ -278,6 +347,18 @@ def structural_failures(results: Dict[str, Dict]) -> List[str]:
             if got[field] != val:
                 fails.append(f"{entry}.hlo.{field}: expected {val}, "
                              f"got {got[field]}")
+    for entry, want in EXPECTED_QUANT_JAXPR.items():
+        got = results.get(entry, {}).get("jaxpr")
+        if got is None:
+            continue
+        for field in ("dot_i8", "dot_f32"):
+            if got[field] != want[field]:
+                fails.append(f"{entry}.jaxpr.{field}: expected "
+                             f"{want[field]}, got {got[field]}")
+        sig = got.get("dot_i8_sig", "")
+        if want["dot_i8"] and not sig.endswith("->" + want["acc"]):
+            fails.append(f"{entry}.jaxpr.dot_i8_sig: accumulator must be "
+                         f"{want['acc']}, got {sig!r}")
     ideal = results.get("frontend.ideal", {}).get("hlo")
     pallas = results.get("frontend.pallas", {}).get("hlo")
     if ideal is not None and pallas is not None:
@@ -450,7 +531,12 @@ def _gate(results: Dict[str, Dict], header: str) -> int:
     import sys
     fails = check(results)
     for entry in sorted(results):
-        c = results[entry]["hlo"]
+        c = results[entry].get("hlo")
+        if c is None:                     # jaxpr-only entry (no HLO off-TPU)
+            j = results[entry]["jaxpr"]
+            print(f"  {entry:16s} dot_i8={j['dot_i8']} "
+                  f"dot_f32={j['dot_f32']} sig={j['dot_i8_sig'] or '-'}")
+            continue
         print(f"  {entry:16s} dot={c['dot_count']} conv={c['conv_count']} "
               f"matmul_flops={c['matmul_flops']:.3g}")
     if fails:
@@ -463,9 +549,10 @@ def _gate(results: Dict[str, Dict], header: str) -> int:
 
 
 def quick_frontend_gate() -> int:
-    """frontend_bench --quick: structural frontend invariants only (no
-    timing, no budget file — the budget diff runs in scripts/lint.sh)."""
-    return _gate(collect(["frontend"]), "frontend")
+    """frontend_bench --quick: structural frontend invariants plus the
+    quantized-dot pin (no timing, no budget file — the budget diff runs in
+    scripts/lint.sh)."""
+    return _gate(collect(["frontend", "quant"]), "frontend")
 
 
 def quick_fleet_gate() -> int:

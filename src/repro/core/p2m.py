@@ -91,6 +91,71 @@ def relu_split_pack(w: jax.Array) -> jax.Array:
                            axis=-1)
 
 
+# --- int8 packed-operand quantization (DESIGN.md §14) ------------------------
+#
+# The quantized Pallas path quantizes BOTH packed-matmul operands:
+#
+#   * weights: per-output-column symmetric int8 over the (K, 2C) relu-split
+#     operand. Per-COLUMN is what makes the scales commute with the two-phase
+#     subtractor: output column j of the packed dot depends only on weight
+#     column j, so dequantizing column j by its own scale reproduces each
+#     phase's MAC independently — u = g(s_j⁺·acc_j⁺) - g(s_j⁻·acc_j⁻) needs
+#     no cross-phase correction term.
+#   * activations: a fixed power-of-two grid (step 1/128) over the [0, 1]
+#     photocurrent range. A power-of-two step makes the combined dequant
+#     factor ``scale / 128`` one EXACT f32 multiply (no 1/127-style rounding),
+#     which is what lets the int8 path reproduce the f32 path bit-for-bit on
+#     power-of-two-grid inputs (regression-tested).
+#
+# The int8 products are at most 127 * 128 < 2^14 and the frontend's
+# contraction depth (k*k*C_in) keeps every partial sum well below 2^24, so a
+# float32 accumulator is EXACT — bit-identical to the int32 MXU accumulator.
+# The kernels therefore accumulate in int32 on real TPUs (native MXU path)
+# and float32 in interpret mode, and the equality is property-tested.
+
+ACT_SCALE_Q8 = 128.0   # activation quantization step = 1/128 (power of two)
+QMAX_INT8 = 127.0      # symmetric int8 range
+
+
+def quantize_packed_weights(wm: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(K, 2C) packed relu-split weights -> ``(wq int8, scale f32 (2C,))``.
+
+    Per-output-column symmetric quantization: ``scale_j = max|wm[:, j]| / 127``
+    (guarded for all-zero columns), ``wq = round(wm / scale)``. The packed
+    operand is already non-negative (relu split), so wq lands in [0, 127];
+    the symmetric formula is kept so the same single source quantizes any
+    signed packed operand (e.g. backbone layers) unchanged.
+    """
+    scale = jnp.maximum(jnp.max(jnp.abs(wm), axis=0), 1e-12) / QMAX_INT8
+    wq = jnp.clip(jnp.round(wm / scale), -QMAX_INT8, QMAX_INT8)
+    return wq.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_packed_weights(wq: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of ``quantize_packed_weights`` (round-trip error <= scale/2)."""
+    return wq.astype(jnp.float32) * scale[None, :].astype(jnp.float32)
+
+
+def quantize_acts_q8(x: jax.Array) -> jax.Array:
+    """[0, 1] activations -> int8 on the fixed 1/128 grid.
+
+    ``round(x * 128)`` clipped to the symmetric int8 range; inputs already on
+    the grid (multiples of 1/128 up to 127/128) quantize EXACTLY.
+    """
+    return jnp.clip(jnp.round(x * ACT_SCALE_Q8),
+                    -QMAX_INT8, QMAX_INT8).astype(jnp.int8)
+
+
+def packed_dequant_row(scale: jax.Array) -> jax.Array:
+    """The (1, 2C) combined dequant factor of the int8 packed dot.
+
+    One multiply maps the integer accumulator back to physical MAC units:
+    ``acc * (weight_scale / ACT_SCALE_Q8)``. Division by the power-of-two
+    activation scale is exact in f32.
+    """
+    return (scale.astype(jnp.float32) / ACT_SCALE_Q8)[None, :]
+
+
 def packed_phase_conv(x: jax.Array, wq: jax.Array, stride: int
                       ) -> Tuple[jax.Array, jax.Array]:
     """Both integration phases in ONE convolution: ``(mac_pos, mac_neg)``.

@@ -125,6 +125,17 @@ class FrontendConfig:
     block_n_elem: Optional[int] = None  # kernel-B row-block cap (elementwise,
                                         # no MXU tile: bigger amortizes
                                         # dispatch)
+    # matmul precision of the pallas path (DESIGN.md §14): None defers to the
+    # autotuner's per-shape choice; "f32"/"int8" pins it. "int8" quantizes
+    # both packed-matmul operands (per-column weight scales + the 1/128
+    # activation grid) and folds dequant into the voltage-map epilogue — the
+    # device chain after the MAC is the same kernel code either way.
+    precision: Optional[str] = None
+    # real TPUs only (interpret=False): generate the fused path's draw words
+    # in-kernel (pltpu.prng_random_bits seeded per (key, block)) instead of
+    # streaming ops.draw_bits from HBM. Interpret mode keeps the hash-word
+    # oracle so CPU validation stays bit-exact vs kernels/ref.py.
+    on_device_rng: bool = False
 
 
 class SensorFrontend:

@@ -228,7 +228,7 @@ def pallas_backend(cfg: FrontendConfig, params: dict, images: jax.Array,
     kw = dict(kernel=pcfg.kernel_size, stride=pcfg.stride, chan=chan,
               pixel_params=pcfg.pixel, mtj_params=pcfg.mtj,
               interpret=cfg.interpret, block_n=cfg.block_n,
-              block_n_elem=cfg.block_n_elem)
+              block_n_elem=cfg.block_n_elem, precision=cfg.precision)
     carry = params.get("theta_carry")
     if carry is not None:
         # fused streaming step (DESIGN.md §9): one kernel, the draws run at
@@ -239,7 +239,8 @@ def pallas_backend(cfg: FrontendConfig, params: dict, images: jax.Array,
         # other call path takes the exact two-kernel pipeline below,
         # bit-identical to the non-streaming contract.
         o, kernel_aux = ops.p2m_frontend_fused(
-            images, wq, params["v_th"], carry, key, **kw)
+            images, wq, params["v_th"], carry, key,
+            on_device_rng=cfg.on_device_rng, **kw)
     else:
         o, kernel_aux = ops.p2m_frontend(
             images, wq, params["v_th"], key, **kw)

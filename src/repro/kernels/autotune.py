@@ -57,17 +57,20 @@ class TileChoice:
     block_n_elem: int     # kernel-B elementwise row-block cap
     block_n_fused: int = 0  # fused-kernel patch-row block (0 = whole N)
     fused: bool = True    # stream with the single fused kernel
+    precision: str = "f32"  # matmul precision the tuner picked (f32 | int8)
 
     def to_json(self) -> Dict:
         return {"block_n": self.block_n, "block_n_elem": self.block_n_elem,
-                "block_n_fused": self.block_n_fused, "fused": self.fused}
+                "block_n_fused": self.block_n_fused, "fused": self.fused,
+                "precision": self.precision}
 
     @staticmethod
     def from_json(d: Dict) -> "TileChoice":
         return TileChoice(block_n=int(d["block_n"]),
                           block_n_elem=int(d["block_n_elem"]),
                           block_n_fused=int(d.get("block_n_fused", 0)),
-                          fused=bool(d["fused"]))
+                          fused=bool(d["fused"]),
+                          precision=str(d.get("precision", "f32")))
 
 
 _TABLE: Dict[TuneKey, TileChoice] = {}
@@ -136,6 +139,18 @@ def resolve_fused(n: int, k_eff: int, c_out: int,
         return block_n
     choice = get(n, k_eff, c_out)
     return choice.block_n_fused or n
+
+
+def resolve_precision(n: int, k_eff: int, c_out: int,
+                      precision: Optional[str] = None) -> str:
+    """Concrete matmul precision for a call: explicit value wins, otherwise
+    the table's tuned choice (``"f32"`` for untuned shapes)."""
+    if precision is not None:
+        if precision not in ("f32", "int8"):
+            raise ValueError(f"unknown frontend precision {precision!r} "
+                             "(expected 'f32' or 'int8')")
+        return precision
+    return get(n, k_eff, c_out).precision
 
 
 def fleet_key(chips_in_batch: int, n: int, k_eff: int, c_out: int) -> TuneKey:
@@ -257,7 +272,10 @@ def autotune_frontend(images, w, v_th, key, *, kernel: int = 3,
     ``report`` maps ``"block_n/block_n_elem"`` to the measured two-kernel
     and fused wall times (ms) — ``benchmarks/frontend_bench.py`` persists it
     so the chosen tiles are auditable. The fused flag is set if the fused
-    streaming step at the winning tiles beats the two-kernel step.
+    streaming step at the winning tiles beats the two-kernel step. The fused
+    candidates run at BOTH matmul precisions (``"fused"`` / ``"fused_q8"``
+    report sections) and the winner's precision is recorded in the choice —
+    the serving path then streams quantized wherever int8 measured faster.
     """
     import jax
 
@@ -272,7 +290,8 @@ def autotune_frontend(images, w, v_th, key, *, kernel: int = 3,
     k_eff = kernel * kernel * cin
     c_out = w.shape[-1]
     theta0 = v_th.reshape(1, 1).astype("float32")
-    report: Dict[str, Dict[str, float]] = {"two_kernel": {}, "fused": {}}
+    report: Dict[str, Dict[str, float]] = {"two_kernel": {}, "fused": {},
+                                           "fused_q8": {}}
     base = dict(kernel=kernel, stride=stride, chan=chan,
                 pixel_params=pixel_params, mtj_params=mtj_params,
                 interpret=interpret)
@@ -288,23 +307,26 @@ def autotune_frontend(images, w, v_th, key, *, kernel: int = 3,
         report["two_kernel"][f"{cand.block_n}/{cand.block_n_elem}"] = ms
         if ms < best_two[0]:
             best_two = (ms, cand)
-    best_fused: Tuple[float, int] = (float("inf"), n)
+    best_fused: Tuple[float, int, str] = (float("inf"), n, "f32")
     for bn in fused_candidates(n):
-        kw = dict(base, block_n=bn)
+        for prec in ("f32", "int8"):
+            kw = dict(base, block_n=bn, precision=prec)
 
-        def fused():
-            jax.block_until_ready(
-                ops.p2m_frontend_fused(images, w, v_th, theta0, key,
-                                       **kw)[0])
+            def fused():
+                jax.block_until_ready(
+                    ops.p2m_frontend_fused(images, w, v_th, theta0, key,
+                                           **kw)[0])
 
-        ms = _best_of(fused, repeats) * 1e3
-        report["fused"][str(bn)] = ms
-        if ms < best_fused[0]:
-            best_fused = (ms, bn)
+            ms = _best_of(fused, repeats) * 1e3
+            section = "fused" if prec == "f32" else "fused_q8"
+            report[section][str(bn)] = ms
+            if ms < best_fused[0]:
+                best_fused = (ms, bn, prec)
     assert best_two[1] is not None
     choice = dataclasses.replace(best_two[1],
                                  block_n_fused=best_fused[1],
-                                 fused=best_fused[0] < best_two[0])
+                                 fused=best_fused[0] < best_two[0],
+                                 precision=best_fused[2])
     if store:
         put(n, k_eff, c_out, choice)
     return choice, report

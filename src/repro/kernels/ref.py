@@ -107,6 +107,40 @@ def p2m_phase_a_ref(patches: jax.Array, w: jax.Array, v_th: jax.Array, *,
     return u, partials
 
 
+def _device_chain_q(u: jax.Array, theta: jax.Array,
+                    chan: jax.Array | None,
+                    pixel_params: pixel_model.PixelCircuitParams,
+                    mtj_params: mtj_model.MTJParams):
+    """(u, theta, variation operand) -> ``(q, v)``: the folded-majority
+    activation probability and the subtractor voltage map.
+
+    Mirrors the kernels' ``_device_epilogue`` expression-for-expression,
+    including the widened (CHAN_ROWS, N_pix, C) per-spatial-pixel operand
+    (u rows reshape frame-major onto the pixel axis and broadcast).
+    """
+    from repro.variation import chip as chip_mod
+
+    if chan is None:
+        chan = chip_mod.identity_operands(u.shape[1])
+    chan = jnp.asarray(chan, jnp.float32)
+    flat_shape = None
+    if chan.ndim == 3:
+        flat_shape = u.shape
+        u = u.reshape(-1, chan.shape[1], chan.shape[2])
+    u = u * chan[chip_mod.CHAN_U_GAIN] + chan[chip_mod.CHAN_U_OFFSET]
+    v = pixel_model.conv_voltage(u, theta, pixel_params)
+    p_sw = mtj_model.switching_probability(
+        v, mtj_params.write_pulse_ps, mtj_params,
+        logit_offset=chan[chip_mod.CHAN_LOGIT_OFFSET],
+        logit_gain=chan[chip_mod.CHAN_LOGIT_GAIN])
+    q = mtj_model.majority_prob_poly(
+        p_sw, mtj_params.n_redundant, mtj_params.majority)
+    if flat_shape is not None:
+        q = q.reshape(flat_shape)
+        v = v.reshape(flat_shape)
+    return q, v
+
+
 def p2m_phase_b_ref(u: jax.Array, theta: jax.Array, bits: jax.Array, *,
                     n_valid: int, c_valid: int,
                     chan: jax.Array | None = None,
@@ -119,27 +153,15 @@ def p2m_phase_b_ref(u: jax.Array, theta: jax.Array, bits: jax.Array, *,
     Returns ``(activations, v_conv_partials)`` as ``p2m_phase_b_pallas``
     does: float {0,1} (N, C) plus per-block masked (sum, min, max) of the
     subtractor voltage (N/block_n, STAT_LANES). ``chan`` is the same
-    (CHAN_ROWS, C) per-channel variation operand the kernel consumes —
-    identical expressions in identical order, so parity stays bit-exact for
-    non-default maps too.
+    (CHAN_ROWS, C) per-channel — or (CHAN_ROWS, N_pix, C) per-spatial-pixel
+    — variation operand the kernel consumes; identical expressions in
+    identical order, so parity stays bit-exact for non-default maps too.
+    For a 3-D ``chan``, pass the kernel's CLAMPED block size (the kernel
+    rounds ``block_n`` down to whole frames of the pixel map).
     """
     from repro.kernels import p2m_conv as k
-    from repro.variation import chip as chip_mod
 
-    if chan is None:
-        chan = chip_mod.identity_operands(u.shape[1])
-    chan = jnp.asarray(chan, jnp.float32)
-    u = (u * chan[chip_mod.CHAN_U_GAIN:chip_mod.CHAN_U_GAIN + 1, :]
-         + chan[chip_mod.CHAN_U_OFFSET:chip_mod.CHAN_U_OFFSET + 1, :])
-    v = pixel_model.conv_voltage(u, theta, pixel_params)
-    p_sw = mtj_model.switching_probability(
-        v, mtj_params.write_pulse_ps, mtj_params,
-        logit_offset=chan[chip_mod.CHAN_LOGIT_OFFSET:
-                          chip_mod.CHAN_LOGIT_OFFSET + 1, :],
-        logit_gain=chan[chip_mod.CHAN_LOGIT_GAIN:
-                        chip_mod.CHAN_LOGIT_GAIN + 1, :])
-    q = mtj_model.majority_prob_poly(
-        p_sw, mtj_params.n_redundant, mtj_params.majority)
+    q, v = _device_chain_q(u, theta, chan, pixel_params, mtj_params)
     draw = mtj_model.bernoulli_from_bits(bits, q)
 
     n, c = u.shape
@@ -158,6 +180,87 @@ def p2m_phase_b_ref(u: jax.Array, theta: jax.Array, bits: jax.Array, *,
                     jnp.max(jnp.where(mb, vb, -jnp.inf),
                             axis=(1, 2))[:, None], 0.0))
     return draw.astype(jnp.float32), partials
+
+
+# ---------------------------------------------------------------------------
+# int8 quantized-path oracles (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def q8_mac_ref(patches: jax.Array, wq_packed: jax.Array,
+               dequant_row: jax.Array) -> jax.Array:
+    """The quantized packed MAC in plain f32: quantize -> dot -> dequant.
+
+    The int8 operands are integer-valued, every product is < 2^14, and the
+    contraction depth keeps partial sums < 2^24, so the ACCUMULATOR of this
+    f32 GEMM is exact — bit-identical to the kernel's s8 x s8 dot under any
+    accumulation order or dtype (core/p2m.py, property-tested). The
+    subsequent dequant multiply is NOT order-pinned, however: XLA may fold
+    the per-column scale into a GEMM operand (``dot(x, w * s)`` vs
+    ``dot(x, w) * s``), which reassociates the non-power-of-two scale and
+    moves u by an ulp — so end-to-end q8 kernel-vs-oracle comparisons go
+    through the draw-boundary machinery like the f32 path, EXCEPT when every
+    scale is a power of two (then both orders are exact and parity is
+    bit-for-bit; tests/test_quantized.py constructs exactly that).
+    """
+    from repro.core import p2m as p2m_core
+    xq = p2m_core.quantize_acts_q8(patches).astype(jnp.float32)
+    # the oracle INTENTIONALLY accumulates the integer-valued operands in
+    # f32 (exact; see docstring)
+    a = jnp.dot(xq, wq_packed.astype(jnp.float32),  # analysis: waive=q8-f32-dot
+                preferred_element_type=jnp.float32)
+    return a * jnp.asarray(dequant_row, jnp.float32)
+
+
+def p2m_phase_a_q8_ref(patches: jax.Array, wq_packed: jax.Array,
+                       dequant_row: jax.Array, v_th: jax.Array, *,
+                       pixel_params: pixel_model.PixelCircuitParams =
+                       pixel_model.DEFAULT_PIXEL,
+                       block_n: int = 256):
+    """Oracle for the quantized kernel A: ``(u, hoyer_partials)``.
+
+    ``wq_packed`` (K, 2C) int8 + ``dequant_row`` (1, 2C) come from
+    ``core.p2m.quantize_packed_weights`` / ``packed_dequant_row`` over the
+    packed relu-split weights; activations quantize onto the 1/128 grid
+    exactly as the kernel does in VMEM.
+    """
+    from repro.core import hoyer
+    from repro.kernels import p2m_conv as k
+
+    a = q8_mac_ref(patches, wq_packed, dequant_row)
+    c_out = wq_packed.shape[1] // 2
+    g = pixel_model.get_curve(pixel_params.curve, pixel_params)
+    u = g(a[:, :c_out]) - g(a[:, c_out:])
+    zc = hoyer.clip01(u / jnp.maximum(v_th, 1e-6))
+    zb = _block_rows(zc, block_n)
+    lane = jnp.arange(k.STAT_LANES)
+    partials = (
+        jnp.where(lane == k.LANE_ABS,
+                  jnp.sum(jnp.abs(zb), axis=(1, 2))[:, None], 0.0)
+        + jnp.where(lane == k.LANE_SQ,
+                    jnp.sum(jnp.square(zb), axis=(1, 2))[:, None], 0.0))
+    return u, partials
+
+
+def p2m_conv_ref_q8_q(patches: jax.Array, wq_packed: jax.Array,
+                      dequant_row: jax.Array, theta: jax.Array, *,
+                      chan: jax.Array | None = None,
+                      pixel_params: pixel_model.PixelCircuitParams =
+                      pixel_model.DEFAULT_PIXEL,
+                      mtj_params: mtj_model.MTJParams = mtj_model.DEFAULT_MTJ
+                      ) -> jax.Array:
+    """Folded-majority activation probability q of the FULL quantized chain
+    (quantized MAC -> curve/subtract -> voltage -> switching -> majority).
+
+    The q the draw thresholds against — ``tests/draw_asserts.py`` compares
+    a quantized run's activations to the f32 oracle through this q to
+    verify that flips are rare AND sit on uint16 draw-word boundaries.
+    """
+    a = q8_mac_ref(patches, wq_packed, dequant_row)
+    c_out = wq_packed.shape[1] // 2
+    g = pixel_model.get_curve(pixel_params.curve, pixel_params)
+    u = g(a[:, :c_out]) - g(a[:, c_out:])
+    q, _ = _device_chain_q(u, theta, chan, pixel_params, mtj_params)
+    return q
 
 
 # ---------------------------------------------------------------------------

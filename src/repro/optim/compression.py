@@ -15,12 +15,14 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.p2m import QMAX_INT8
+
 
 def compress_int8(g: jax.Array, residual: jax.Array
                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Returns (q_int8, scale, new_residual). g + residual ~= q * scale."""
     g32 = g.astype(jnp.float32) + residual
-    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-30) / 127.0
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-30) / QMAX_INT8
     q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
     new_residual = g32 - q.astype(jnp.float32) * scale
     return q, scale, new_residual

@@ -200,6 +200,25 @@ def identity_operands(n_channels: int) -> jax.Array:
     return jnp.stack([o, z, o, z])
 
 
+def pixel_operands(chip: ChipMaps, n_pix: int,
+                   cal_trim: Optional[jax.Array] = None) -> jax.Array:
+    """The widened (4, N_pix, C) per-SPATIAL-PIXEL operand of kernel B.
+
+    A real pixel array's mismatch varies across the die, not just across
+    channels: this broadcasts the chip's per-channel rows over the frame's
+    ``n_pix = H' * W'`` output positions so the kernels' per-pixel indexing
+    path (rows frame-major, pixel-minor — each patch row reads ITS pixel's
+    column) can run a spatially-varying map. The broadcast map is
+    value-identical to the (4, C) operand at every pixel, so kernel parity
+    between the two layouts is regression-tested through it; callers with a
+    genuinely spatial model (e.g. a measured die map) can perturb the
+    returned array per pixel directly.
+    """
+    return jnp.broadcast_to(channel_operands(chip, cal_trim)[:, None, :],
+                            (CHAN_ROWS, n_pix,
+                             chip.pixel_gain.shape[-1])).astype(jnp.float32)
+
+
 # --- the chip-perturbed device chain -----------------------------------------
 
 def device_chain(u: jax.Array, theta: jax.Array, chip: ChipMaps,

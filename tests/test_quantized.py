@@ -1,0 +1,435 @@
+"""Quantized int8 frontend path (DESIGN.md §14).
+
+Covers: quantization round-trip error bounds against the theoretical
+half-step bound; exactness of the int8 MAC (f32 accumulation bit-identical
+to int32 accumulation under the K < 2^24/127/128 depth bound); boundary-aware
+end-to-end parity of the quantized kernels vs the ``kernels/ref.py`` q8
+oracles; strict operand-level phase-B parity (kernel B is literally the same
+kernel either precision); the power-of-two-scale construction under which
+the f32 and int8 frontends are BIT-IDENTICAL end to end (sigma=0 chips,
+identical channel_rates); the widened per-spatial-pixel (CHAN_ROWS, N_pix,
+C) variation operand; the on-device-RNG path's trace structure; and the
+autotuner's precision axis.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from draw_asserts import assert_draws_match_modulo_word_boundary
+from repro.core import p2m
+from repro.kernels import autotune, ops, ref
+from repro.kernels import p2m_conv as pk
+
+CFG = p2m.P2MConfig()
+
+
+def _setup(seed=0, b=2, hw=32, cfg=CFG):
+    params = p2m.init_params(jax.random.PRNGKey(seed), cfg)
+    frame = jax.random.uniform(jax.random.PRNGKey(seed + 1), (b, hw, hw, 3))
+    return params, frame
+
+
+def _packed_q8(w, cout):
+    """(k,k,cin,cout) f32 -> (wm packed f32, wq int8, dequant row)."""
+    wm = pk.pack_phase_weights(w.reshape(-1, cout))
+    wq, dq = ops.quantize_frontend_weights(wm)
+    return wm, wq, dq
+
+
+class TestQuantizationProperties:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_weight_roundtrip_error_within_half_step(self, seed):
+        """Symmetric round-to-nearest: |dequant(quant(w)) - w| <= scale/2
+        per column (the theoretical bound; no clipping error — the scale is
+        defined so the column max lands exactly on +/-127)."""
+        w = jax.random.normal(jax.random.PRNGKey(seed), (27, 16)) * 0.3
+        wm = pk.pack_phase_weights(w)
+        wq, scale = p2m.quantize_packed_weights(wm)
+        assert wq.dtype == jnp.int8
+        assert int(jnp.max(jnp.abs(wq.astype(jnp.int32)))) <= 127
+        back = p2m.dequantize_packed_weights(wq, scale)
+        err = np.abs(np.asarray(back) - np.asarray(wm))
+        bound = 0.5 * np.asarray(scale)[None, :] * (1 + 1e-5) + 1e-9
+        assert (err <= bound).all(), float((err - bound).max())
+
+    def test_act_roundtrip_error_within_half_step(self):
+        """Activation grid 1/128: |deq(q(x)) - x| <= 1/256 on the unclipped
+        range."""
+        x = jnp.linspace(0.0, 127.0 / 128.0, 4097)
+        back = p2m.quantize_acts_q8(x).astype(jnp.float32) / p2m.ACT_SCALE_Q8
+        err = np.abs(np.asarray(back) - np.asarray(x))
+        assert err.max() <= 1.0 / 256.0 + 1e-7, err.max()
+
+    @pytest.mark.parametrize("k", [27, 512])
+    def test_f32_accumulation_bit_identical_to_int32(self, k):
+        """The exactness claim the interpret-mode accumulator rests on:
+        int8 products < 2^14 and depth K keeps every partial sum < 2^24, so
+        an f32 accumulator of the s8 x s8 dot is EXACT — bit-identical to
+        the int32 MXU accumulation (K=512 is ~19x the production depth of
+        27 and still inside the bound)."""
+        key = jax.random.PRNGKey(3)
+        a = jax.random.randint(key, (256, k), -127, 128, jnp.int32)
+        b = jax.random.randint(jax.random.fold_in(key, 1), (k, 64),
+                               -127, 128, jnp.int32)
+        a8, b8 = a.astype(jnp.int8), b.astype(jnp.int8)
+        f32 = jnp.dot(a8, b8, preferred_element_type=jnp.float32)
+        i32 = jnp.dot(a8, b8, preferred_element_type=jnp.int32)
+        np.testing.assert_array_equal(np.asarray(f32),
+                                      np.asarray(i32, np.float32))
+
+    def test_quantized_mac_error_vs_f32_mac(self):
+        """End-to-end MAC error of the quantized path is bounded by the
+        propagated per-operand half-steps (triangle inequality over the
+        contraction)."""
+        key = jax.random.PRNGKey(4)
+        x = jax.random.uniform(key, (128, 27))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (27, 16)) * 0.3
+        wm = pk.pack_phase_weights(w)
+        wq, scale = p2m.quantize_packed_weights(wm)
+        dq = p2m.packed_dequant_row(scale)
+        got = np.asarray(ref.q8_mac_ref(x, wq, dq))
+        want = np.asarray(jnp.dot(x, wm))
+        # per-output bound: sum_k |x| * scale/2  +  sum_k |w| / 256
+        bound = (np.abs(np.asarray(x)).sum(1, keepdims=True)
+                 * 0.5 * np.asarray(scale)[None, :]
+                 + np.abs(np.asarray(wm)).sum(0, keepdims=True) / 256.0
+                 + 1e-5)
+        assert (np.abs(got - want) <= bound).all()
+
+
+class TestQ8KernelParity:
+    def test_kernel_a_q8_matches_oracle(self):
+        """Quantized implicit-im2col kernel A vs the materialized-patch q8
+        oracle: u to an ulp (XLA may reassociate the dequant multiply) and
+        the combined Hoyer threshold to rtol."""
+        params, frame = _setup(seed=5, b=2, hw=16)
+        _, wq, dq = _packed_q8(params["w"], CFG.out_channels)
+        uk, hk = pk.p2m_phase_a_implicit_q8_pallas(
+            frame, wq, dq, jnp.ones((1, 1)), kernel=3, stride=2, block_n=128)
+        patches = ops.im2col(frame, 3, 2).astype(jnp.float32)
+        ur, _ = ref.p2m_phase_a_q8_ref(patches, wq, dq, jnp.asarray(1.0),
+                                       block_n=patches.shape[0])
+        np.testing.assert_allclose(np.asarray(uk), np.asarray(ur), atol=1e-5)
+        theta_k = pk.combine_hoyer_partials(hk, jnp.asarray(1.0))
+        from repro.core import hoyer
+        theta_r = hoyer.hoyer_extremum(hoyer.clip01(ur))
+        np.testing.assert_allclose(float(theta_k), float(theta_r), rtol=1e-5)
+
+    def test_q8_u_invariant_to_block_rows(self):
+        """The int8 accumulator is exact, so u is BIT-identical across tile
+        geometries (stronger than the f32 path's ulp tolerance)."""
+        params, frame = _setup(seed=6, b=4, hw=16)
+        _, wq, dq = _packed_q8(params["w"], CFG.out_channels)
+        outs = [pk.p2m_phase_a_implicit_q8_pallas(
+            frame, wq, dq, jnp.ones((1, 1)), kernel=3, stride=2,
+            block_n=bn)[0] for bn in (64, 256, 1024)]
+        for u in outs[1:]:
+            np.testing.assert_array_equal(np.asarray(u), np.asarray(outs[0]))
+
+    def test_q8_frontend_draws_match_oracle_modulo_boundary(self):
+        """End-to-end int8 frontend vs the full q8 oracle chain: mismatches
+        must be rare and sit on uint16 draw-word boundaries (the ulp-of-u
+        effect of the reassociated dequant — tests/draw_asserts.py)."""
+        params, frame = _setup(seed=7, b=2, hw=32)
+        key = jax.random.PRNGKey(13)
+        o, aux = ops.p2m_frontend(frame, params["w"], params["v_th"], key,
+                                  precision="int8")
+        _, wq, dq = _packed_q8(params["w"], CFG.out_channels)
+        patches = ops.im2col(frame, 3, 2).astype(jnp.float32)
+        q_ref = ref.p2m_conv_ref_q8_q(patches, wq, dq, aux["theta"])
+        n, c = patches.shape[0], CFG.out_channels
+        bits = ops.draw_bits(key, n, c)
+        assert_draws_match_modulo_word_boundary(
+            np.asarray(o).reshape(n, c), q_ref, bits)
+
+    def test_fused_q8_pinned_theta_bit_exact_vs_exact_q8(self):
+        """At the exact q8 pipeline's own theta the fused q8 single-kernel
+        step reproduces its activations bit-for-bit, and the packed stats
+        row combines to the same aux (same reduction order)."""
+        params, frame = _setup(seed=8, b=2, hw=32)
+        key = jax.random.PRNGKey(17)
+        o, aux = ops.p2m_frontend(frame, params["w"], params["v_th"], key,
+                                  precision="int8")
+        of, auxf = ops.p2m_frontend_fused(frame, params["w"], params["v_th"],
+                                          aux["theta"], key,
+                                          precision="int8")
+        np.testing.assert_array_equal(np.asarray(of), np.asarray(o))
+        np.testing.assert_allclose(float(auxf["theta"]), float(aux["theta"]),
+                                   rtol=1e-6)
+        for k in ("v_conv_mean", "v_conv_min", "v_conv_max"):
+            np.testing.assert_allclose(float(auxf[k]), float(aux[k]),
+                                       rtol=1e-6, err_msg=k)
+        rates = jnp.mean(of, axis=(0, 1, 2))
+        np.testing.assert_allclose(np.asarray(auxf["channel_rates"]),
+                                   np.asarray(rates), atol=1e-6)
+
+    def test_phase_b_operand_parity_is_strict(self):
+        """Kernel B given the q8 path's u operand is BIT-exact vs the
+        oracle device chain: the quantized path swaps only kernel A — phase
+        B is the same kernel at both precisions, so its parity is
+        structural, not statistical."""
+        params, frame = _setup(seed=9, b=2, hw=16)
+        _, wq, dq = _packed_q8(params["w"], CFG.out_channels)
+        u, hk = pk.p2m_phase_a_implicit_q8_pallas(
+            frame, wq, dq, params["v_th"].reshape(1, 1), kernel=3, stride=2,
+            block_n=256)
+        theta = pk.combine_hoyer_partials(hk, params["v_th"])
+        n, c = u.shape
+        bits = ops.draw_bits(jax.random.PRNGKey(19), n, c)
+        dk, vk = pk.p2m_phase_b_pallas(u, theta.reshape(1, 1), bits,
+                                       n_valid=n, c_valid=c, block_n=n)
+        dr, vr = ref.p2m_phase_b_ref(u, theta, bits, n_valid=n, c_valid=c,
+                                     block_n=n)
+        np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
+        np.testing.assert_allclose(np.asarray(vk), np.asarray(vr), rtol=1e-6)
+
+
+class TestPowerOfTwoBitExactness:
+    """The satellite-3 construction: weights on the integer * 2^-9 grid with
+    +/-127 pinned per packed column (scales come out exactly 2^-9, dequant
+    row exactly 2^-16) and activations on the 1/128 grid. Every value in
+    both MACs is then exactly representable, both accumulations are exact,
+    and the power-of-two dequant commutes through any XLA reassociation —
+    the f32 and int8 frontends are bit-identical end to end."""
+
+    def _grid_inputs(self, seed=0, b=2, hw=16, cout=8):
+        key = jax.random.PRNGKey(seed)
+        w_int = jax.random.randint(key, (3, 3, 3, cout), -126, 127,
+                                   jnp.int32)
+        # pin +127 and -127 into every output channel so BOTH relu-split
+        # packed columns get max exactly 127 * 2^-9 -> scale exactly 2^-9
+        w_int = w_int.at[0, 0, 0, :].set(127).at[0, 0, 1, :].set(-127)
+        w = w_int.astype(jnp.float32) * 2.0 ** -9
+        a = jax.random.randint(jax.random.fold_in(key, 1),
+                               (b, hw, hw, 3), 0, 128, jnp.int32)
+        frame = a.astype(jnp.float32) / 128.0
+        return w, frame
+
+    def test_scales_are_exact_powers_of_two(self):
+        w, _ = self._grid_inputs()
+        wm = pk.pack_phase_weights(w.reshape(-1, w.shape[-1]))
+        wq, scale = p2m.quantize_packed_weights(wm)
+        np.testing.assert_array_equal(np.asarray(scale),
+                                      np.full(scale.shape, 2.0 ** -9,
+                                              np.float32))
+        # on this grid quantization is lossless
+        np.testing.assert_array_equal(
+            np.asarray(p2m.dequantize_packed_weights(wq, scale)),
+            np.asarray(wm))
+
+    def test_exact_path_bit_identical_f32_vs_int8(self):
+        """sigma=0 chips: identical activations, theta, and channel rates
+        between precisions — not allclose, array_equal."""
+        w, frame = self._grid_inputs(seed=1)
+        v_th = jnp.asarray(1.0)
+        key = jax.random.PRNGKey(23)
+        o32, aux32 = ops.p2m_frontend(frame, w, v_th, key, precision="f32")
+        o8, aux8 = ops.p2m_frontend(frame, w, v_th, key, precision="int8")
+        np.testing.assert_array_equal(np.asarray(o8), np.asarray(o32))
+        np.testing.assert_array_equal(np.asarray(aux8["theta"]),
+                                      np.asarray(aux32["theta"]))
+        np.testing.assert_array_equal(
+            np.asarray(jnp.mean(o8, axis=(0, 1, 2))),
+            np.asarray(jnp.mean(o32, axis=(0, 1, 2))))
+
+    def test_fused_path_bit_identical_f32_vs_int8(self):
+        """The fused streaming kernels agree bit-for-bit too — including
+        the aux the two kernels emit through DIFFERENT stats packings
+        (three partial rows vs one packed row; identical reduction order by
+        construction, checked here)."""
+        w, frame = self._grid_inputs(seed=2)
+        v_th = jnp.asarray(1.0)
+        theta = jnp.asarray(0.7, jnp.float32)
+        key = jax.random.PRNGKey(29)
+        o32, aux32 = ops.p2m_frontend_fused(frame, w, v_th, theta, key,
+                                            precision="f32")
+        o8, aux8 = ops.p2m_frontend_fused(frame, w, v_th, theta, key,
+                                          precision="int8")
+        np.testing.assert_array_equal(np.asarray(o8), np.asarray(o32))
+        np.testing.assert_array_equal(np.asarray(aux8["channel_rates"]),
+                                      np.asarray(aux32["channel_rates"]))
+        for k in ("theta", "v_conv_mean", "v_conv_min", "v_conv_max"):
+            np.testing.assert_array_equal(np.asarray(aux8[k]),
+                                          np.asarray(aux32[k]), err_msg=k)
+
+
+class TestPerPixelChanOperand:
+    """The widened (CHAN_ROWS, N_pix, C) kernel-B variation operand."""
+
+    def _chip(self, cout, sigma=0.3):
+        from repro.variation.chip import VariationConfig, sample_chip
+        vcfg = VariationConfig(sigma_logit_offset=sigma,
+                               sigma_pixel_gain=0.05,
+                               sigma_pixel_offset=0.05)
+        return sample_chip(vcfg, cout, 8, chip_id=3)
+
+    def test_broadcast_pixel_operand_matches_channel_operand(self):
+        """A per-pixel map that is constant over pixels must reproduce the
+        (CHAN_ROWS, C) per-channel path bit-for-bit, on BOTH fused
+        precisions — the broadcast is the identity it claims to be."""
+        from repro.variation.chip import channel_operands, pixel_operands
+        params, frame = _setup(seed=11, b=2, hw=16)
+        chip = self._chip(CFG.out_channels)
+        chan2 = channel_operands(chip)
+        n_pix = (16 // 2) ** 2
+        chan3 = pixel_operands(chip, n_pix)
+        assert chan3.shape == (pk.CHAN_ROWS, n_pix, CFG.out_channels)
+        key = jax.random.PRNGKey(31)
+        theta = jnp.asarray(0.7)
+        for prec in ("f32", "int8"):
+            o2, aux2 = ops.p2m_frontend_fused(
+                frame, params["w"], params["v_th"], theta, key, chan=chan2,
+                precision=prec)
+            o3, aux3 = ops.p2m_frontend_fused(
+                frame, params["w"], params["v_th"], theta, key, chan=chan3,
+                precision=prec)
+            np.testing.assert_array_equal(np.asarray(o3), np.asarray(o2),
+                                          err_msg=prec)
+            np.testing.assert_array_equal(
+                np.asarray(aux3["channel_rates"]),
+                np.asarray(aux2["channel_rates"]), err_msg=prec)
+
+    def test_varying_pixel_map_matches_ref(self):
+        """A genuinely pixel-varying map through kernel B is bit-exact vs
+        the oracle device chain (identical expressions, frame-major row
+        indexing)."""
+        from repro.variation.chip import pixel_operands
+        params, frame = _setup(seed=12, b=2, hw=16)
+        c = CFG.out_channels
+        n_pix = (16 // 2) ** 2
+        chip = self._chip(c)
+        base = pixel_operands(chip, n_pix)
+        bump = 0.02 * jax.random.normal(jax.random.PRNGKey(33),
+                                        base.shape)
+        chan3 = (base + bump).astype(jnp.float32)
+        _, wq, dq = _packed_q8(params["w"], c)
+        u, hk = pk.p2m_phase_a_implicit_q8_pallas(
+            frame, wq, dq, params["v_th"].reshape(1, 1), kernel=3, stride=2,
+            block_n=256)
+        theta = pk.combine_hoyer_partials(hk, params["v_th"])
+        n = u.shape[0]
+        bits = ops.draw_bits(jax.random.PRNGKey(37), n, c)
+        dk, _ = pk.p2m_phase_b_pallas(u, theta.reshape(1, 1), bits,
+                                      n_valid=n, c_valid=c, chan=chan3,
+                                      block_n=n)
+        dr, _ = ref.p2m_phase_b_ref(u, theta, bits, n_valid=n, c_valid=c,
+                                    chan=chan3, block_n=n)
+        np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
+        # and the map genuinely varies across pixels (the test is not
+        # accidentally exercising the broadcast case)
+        assert float(jnp.std(chan3, axis=1).max()) > 0.0
+
+
+class TestFleetInheritsQuantized:
+    """The fleet wrappers thread precision through unchanged: a G-chip int8
+    step is bit-identical to G single-chip int8 calls."""
+
+    def test_exact_fleet_q8_rows_match_single_chip(self):
+        params, frame = _setup(seed=13, b=2, hw=16)
+        g = 2
+        gf = jnp.stack([frame, frame[::-1]])
+        keys = jax.random.split(jax.random.PRNGKey(41), g)
+        acts, aux = ops.p2m_frontend_fleet(gf, params["w"], params["v_th"],
+                                           keys, precision="int8")
+        for i in range(g):
+            oi, auxi = ops.p2m_frontend(gf[i], params["w"], params["v_th"],
+                                        keys[i], precision="int8")
+            np.testing.assert_array_equal(np.asarray(acts[i]),
+                                          np.asarray(oi))
+            np.testing.assert_array_equal(np.asarray(aux["theta"][i]),
+                                          np.asarray(auxi["theta"]))
+
+    def test_fused_fleet_q8_rows_match_single_chip(self):
+        params, frame = _setup(seed=14, b=2, hw=16)
+        g = 2
+        gf = jnp.stack([frame, frame * 0.5])
+        keys = jax.random.split(jax.random.PRNGKey(43), g)
+        theta = jnp.asarray([0.6, 0.8], jnp.float32)
+        acts, aux = ops.p2m_frontend_fused_fleet(
+            gf, params["w"], params["v_th"], theta, keys, precision="int8")
+        for i in range(g):
+            oi, auxi = ops.p2m_frontend_fused(
+                gf[i], params["w"], params["v_th"], theta[i], keys[i],
+                precision="int8")
+            np.testing.assert_array_equal(np.asarray(acts[i]),
+                                          np.asarray(oi))
+            np.testing.assert_array_equal(
+                np.asarray(aux["channel_rates"][i]),
+                np.asarray(auxi["channel_rates"]))
+
+
+class TestOnDeviceRng:
+    def test_interpret_mode_rejects_rng_seed(self):
+        """Interpret runs must keep the hash-word oracle: pltpu prng has no
+        interpret lowering, and silently falling back would fork the draw
+        stream between CPU validation and TPU serving."""
+        params, frame = _setup(seed=15, b=2, hw=16)
+        _, wq, dq = _packed_q8(params["w"], CFG.out_channels)
+        seed = ops.rng_seed_from_key(jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="interpret"):
+            pk.p2m_fused_stream_q8_pallas(
+                frame, wq, dq, jnp.ones((1, 1)), jnp.full((1, 1), 0.7),
+                None, kernel=3, stride=2, rng_seed=seed, interpret=True)
+
+    @pytest.mark.parametrize("precision", ["f32", "int8"])
+    def test_mxu_trace_uses_in_kernel_prng(self, precision):
+        """interpret=False + on_device_rng: the traced kernel seeds
+        pltpu.prng per (key, block) and draws its words in-kernel — no
+        (N, C) bits operand is streamed from HBM. make_jaxpr traces the
+        Mosaic path without needing TPU hardware."""
+        params, frame = _setup(seed=16, b=2, hw=16)
+        fn = functools.partial(
+            ops.p2m_frontend_fused, kernel=3, stride=2,
+            interpret=False, on_device_rng=True, precision=precision)
+        jaxpr = jax.make_jaxpr(fn)(
+            frame, params["w"], params["v_th"], jnp.asarray(0.7),
+            jax.random.PRNGKey(0))
+        text = str(jaxpr)
+        assert "prng_seed" in text
+        assert "prng_random_bits" in text
+
+    def test_interpret_trace_streams_hash_words(self):
+        """Default (oracle) path: no pltpu prng primitives in the trace."""
+        params, frame = _setup(seed=16, b=2, hw=16)
+        fn = functools.partial(ops.p2m_frontend_fused, kernel=3, stride=2,
+                               precision="int8")
+        jaxpr = jax.make_jaxpr(fn)(
+            frame, params["w"], params["v_th"], jnp.asarray(0.7),
+            jax.random.PRNGKey(0))
+        assert "prng_random_bits" not in str(jaxpr)
+
+
+class TestAutotunePrecisionAxis:
+    def test_tile_choice_roundtrip_keeps_precision(self):
+        c = autotune.TileChoice(block_n=512, block_n_elem=4096,
+                                block_n_fused=0, fused=True,
+                                precision="int8")
+        assert autotune.TileChoice.from_json(c.to_json()) == c
+
+    def test_from_json_backward_compatible(self):
+        """Pre-quantization tile tables (no precision field) load as f32."""
+        legacy = {"block_n": 512, "block_n_elem": 4096, "fused": True}
+        c = autotune.TileChoice.from_json(legacy)
+        assert c.precision == "f32"
+
+    def test_resolve_precision_explicit_wins_and_validates(self):
+        assert autotune.resolve_precision(4096, 27, 32, "int8") == "int8"
+        assert autotune.resolve_precision(4096, 27, 32, "f32") == "f32"
+        with pytest.raises(ValueError, match="precision"):
+            autotune.resolve_precision(4096, 27, 32, "fp8")
+
+    def test_frontend_config_carries_precision(self):
+        from repro import frontend
+        cfg = frontend.FrontendConfig(precision="int8")
+        fe = frontend.SensorFrontend(cfg)
+        params = fe.init(jax.random.PRNGKey(0))
+        frames = jax.random.uniform(jax.random.PRNGKey(1), (2, 16, 16, 3))
+        acts, aux = fe(params, frames, key=jax.random.PRNGKey(2),
+                       mode="pallas")
+        assert acts.shape == (2, 8, 8, CFG.out_channels)
+        assert set(aux) >= {"theta", "channel_rates", "sparsity",
+                            "v_conv_mean"}
